@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing.
+
+Paper-faithful parameters are (logN, logQ, logp) = (16, 1200, 30) — pass
+--full for those. The default is logN=14, logQ=600 so the whole suite runs
+in minutes on this CPU container; every table reports its parameter set and
+derived columns scale as the paper's §VIII analysis predicts.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.core.params import HEParams
+
+
+def bench_params(full: bool = False, beta_bits: int = 32) -> HEParams:
+    if full:
+        return HEParams(logN=16, logQ=1200, logp=30, log_delta=30,
+                        beta_bits=beta_bits)
+    return HEParams(logN=14, logQ=600, logp=30, log_delta=30,
+                    beta_bits=beta_bits)
+
+
+def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1, **kw):
+    """Median wall time in seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

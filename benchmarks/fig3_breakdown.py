@@ -1,0 +1,82 @@
+"""Paper Fig. 3: HE Mul execution-time breakdown.
+
+Times each stage of the Fig. 2 pipeline (region 1: 4 CRT, 4 NTT, 3 pointwise,
+3 iNTT, 3 iCRT; region 2: 1 CRT+NTT, 2 pointwise, 2 iNTT+iCRT, shifts/adds)
+on the real shapes the full HE Mul uses, and reports each function's share.
+Paper: CRT+NTT+iNTT+iCRT = 95.8 % of 5,108 ms single-thread.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_params, row, timeit
+from repro.core import rns
+from repro.core.context import make_context
+from repro.core.crt import crt, icrt
+from repro.core.ntt import intt, ntt
+from repro.core.wordops import mont_modmul
+from repro.nt.residue import ints_to_limb_array
+
+import random
+
+
+def run(full: bool = False) -> None:
+    params = bench_params(full)
+    logq = params.logQ
+    ctx = make_context(params, logq)
+    g = ctx.tables
+    N, K = ctx.N, ctx.qlimbs
+    pr = random.Random(0)
+    x = jnp.asarray(ints_to_limb_array(
+        [pr.getrandbits(logq) for _ in range(N)], K, params.beta_bits))
+
+    totals = {}
+    for region, npn, n_crt, n_ntt, n_pw, n_intt, n_icrt in (
+            (1, ctx.np1, 4, 4, 3, 3, 3),
+            (2, ctx.np2, 1, 1, 2, 2, 2)):
+        tabs = ctx.icrt1 if region == 1 else ctx.icrt2
+        crt_args = (jnp.asarray(g.crt_tb[:npn, :K]),
+                    jnp.asarray(g.crt_tb_shoup[:npn, :K]),
+                    jnp.asarray(g.primes[:npn]))
+        t_crt, res = timeit(lambda: crt(x, *crt_args), reps=2)
+        ntt_args = (jnp.asarray(g.psi_rev[:npn]),
+                    jnp.asarray(g.psi_rev_shoup[:npn]),
+                    jnp.asarray(g.primes[:npn]))
+        t_ntt, ev = timeit(lambda: ntt(res, *ntt_args), reps=2)
+        t_pw, prod = timeit(lambda: mont_modmul(
+            ev, ev, jnp.asarray(g.primes[:npn])[:, None],
+            jnp.asarray(g.pprime[:npn])[:, None],
+            jnp.asarray(g.r2[:npn])[:, None]), reps=2)
+        intt_args = (jnp.asarray(g.ipsi_rev[:npn]),
+                     jnp.asarray(g.ipsi_rev_shoup[:npn]),
+                     jnp.asarray(g.n_inv[:npn]),
+                     jnp.asarray(g.n_inv_shoup[:npn]),
+                     jnp.asarray(g.primes[:npn]))
+        t_intt, back = timeit(lambda: intt(prod, *intt_args), reps=2)
+        t_icrt, _ = timeit(lambda: icrt(
+            back, tabs, jnp.asarray(g.primes[:npn]),
+            jnp.asarray(tabs.inv_P), jnp.asarray(tabs.inv_P_shoup),
+            jnp.asarray(tabs.pdivp), jnp.asarray(tabs.P_limbs),
+            jnp.asarray(tabs.P_half_limbs),
+            jnp.asarray(g.p_inv_f64[:npn]),
+            out_limbs=K), reps=2)
+        totals.setdefault("CRT", 0.0)
+        totals["CRT"] = totals.get("CRT", 0) + n_crt * t_crt
+        totals["NTT"] = totals.get("NTT", 0) + n_ntt * t_ntt
+        totals["Extra(pointwise)"] = totals.get("Extra(pointwise)", 0) \
+            + n_pw * t_pw
+        totals["iNTT"] = totals.get("iNTT", 0) + n_intt * t_intt
+        totals["iCRT"] = totals.get("iCRT", 0) + n_icrt * t_icrt
+
+    total = sum(totals.values())
+    core4 = sum(totals[k] for k in ("CRT", "NTT", "iNTT", "iCRT"))
+    for k, v in totals.items():
+        row(f"fig3/{k}", v * 1e6, f"{100*v/total:.1f}%")
+    row("fig3/core4_share", core4 * 1e6,
+        f"{100*core4/total:.1f}% (paper: 95.8%)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Figs. 6 & 7: HE Mul op counts vs log Q (O((log Q)³)) and vs log q.
+
+Fig. 6: at each log Q, N is scaled per the security table (Table II) and
+np/qLimbs/PLimbs follow; total ops ∝ (log Q)³.
+Fig. 7: at fixed log Q = max, ops vs the current level's log q; region-2 np
+tracks (log q + 2 log Q), so cost at the last level stays ≳20 % of the top
+(paper: 24 %).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_params, row
+from benchmarks.opcount_model import hemul_total_ops
+from repro.core.params import HEParams
+
+
+# Table II: logQ -> logN for 80-bit security
+_SECURITY = {150: 13, 300: 14, 600: 15, 1200: 16, 2400: 17}
+
+
+def run(full: bool = False) -> None:
+    base = None
+    for logQ, logN in _SECURITY.items():
+        p = HEParams(logN=logN, logQ=logQ, logp=30, log_delta=30,
+                     beta_bits=32)
+        ops = hemul_total_ops(p, logQ)
+        base = base or ops
+        row(f"fig6/logQ{logQ}", ops / 1e6,
+            f"rel={ops/base:.2f}x N=2^{logN}")
+
+    params = bench_params(full)
+    top = hemul_total_ops(params, params.logQ)
+    for frac in (1.0, 0.75, 0.5, 0.25, 30 / params.logQ):
+        logq = max(params.logp, int(params.logQ * frac)
+                   // params.logp * params.logp)
+        ops = hemul_total_ops(params, logq)
+        row(f"fig7/logq{logq}", ops / 1e6,
+            f"rel_to_top={100*ops/top:.0f}% (paper: 24% at logq=30)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,126 @@
+"""§Perf hillclimb driver: lower variant configs of the three chosen cells
+and record the roofline deltas (hypothesis → change → before/after log is
+kept in EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell he
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell mamba
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen
+    (writes hillclimb_results.jsonl)
+
+Cells (chosen per the assignment from the baseline table):
+  he    heaan_mul/he_mul_b64      — most representative of the paper's
+                                    technique + highest collective/compute.
+  mamba falcon-mamba-7b/train_4k  — worst roofline fraction (MODEL/HLO
+                                    0.39: emulation + scan waste).
+  qwen  qwen2.5-32b/train_4k      — most collective-bound (abs bytes).
+"""
+
+from __future__ import annotations
+
+import os
+
+if "--xla" not in str(os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401
+
+
+def _emit(path, rec):
+    print(f"{rec['variant']:28s} flops={rec['analysis'].get('flops'):.4} "
+          f"bytes={rec['analysis'].get('bytes_accessed'):.4} "
+          f"coll={rec['analysis']['collectives']['total_bytes']:.4} "
+          f"peak={rec['analysis'].get('memory', {}).get('temp_bytes')}",
+          flush=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def climb_he(out_path):
+    from repro.configs.heaan_mul import CONFIG as HEP
+    from repro.dist import he_pipeline as hp
+    from repro.dist.sharding import he_limb_sharding
+    from repro.launch.dryrun import _analyze
+    from repro.launch.mesh import make_production_mesh
+    import time
+
+    mesh = make_production_mesh()
+    st = hp.he_static(HEP, HEP.logQ)
+    batch = 64
+    variants = [
+        ("he-base(matmul,AR)", dict(icrt_strategy="matmul",
+                                    reduce_scatter_icrt=False)),
+        ("he-rs(matmul,RS-icrt)", dict(icrt_strategy="matmul",
+                                       reduce_scatter_icrt=True)),
+        ("he-acc3(u32-only,AR)", dict(icrt_strategy="acc3",
+                                      reduce_scatter_icrt=False)),
+        ("he-rs-acc3(u32-only,RS)", dict(icrt_strategy="acc3",
+                                         reduce_scatter_icrt=True)),
+    ]
+    for name, kw in variants:
+        step = hp.make_he_mul_step(st, mesh, **kw)
+        t1, t2, ek = hp.he_table_specs(st)
+        cts = hp.he_input_specs(st, batch)
+        sh = he_limb_sharding(mesh, batch=batch)
+        cts = tuple(jax.ShapeDtypeStruct(c.shape, c.dtype, sharding=sh)
+                    for c in cts)
+        t0 = time.time()
+        lowered = jax.jit(step).lower(t1, t2, ek, *cts)
+        compiled = lowered.compile()
+        rec = {"cell": "heaan_mul/he_mul_b64", "variant": name,
+               "analysis": _analyze(lowered, compiled, time.time() - t0)}
+        _emit(out_path, rec)
+
+
+def climb_lm(arch, shape, variants, out_path):
+    from repro.launch.dryrun import lower_lm_cell
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh()
+    for name, overrides, opt_dtype, mode in variants:
+        a = lower_lm_cell(arch, shape, mesh, cost_correct=True,
+                          overrides=overrides, opt_dtype=opt_dtype,
+                          sharding_mode=mode)
+        rec = {"cell": f"{arch}/{shape}", "variant": name, "analysis": a}
+        _emit(out_path, rec)
+
+
+MAMBA_VARIANTS = [
+    ("mamba-base(chunk128,full)", None, None, "fsdp"),
+    ("mamba-zero1", None, None, "zero1"),
+    ("mamba-chunk512", dict(ssm_chunk=512), None, "fsdp"),
+    ("mamba-zero1-chunk512", dict(ssm_chunk=512), None, "zero1"),
+    ("mamba-zero1-c512-dots", dict(ssm_chunk=512, remat_policy="dots"),
+     None, "zero1"),
+]
+
+QWEN_VARIANTS = [
+    ("qwen-base(fsdp,full-remat)", None, None, "fsdp"),
+    ("qwen-zero1", None, None, "zero1"),
+    ("qwen-zero1-dots", dict(remat_policy="dots"), None, "zero1"),
+    ("qwen-zero1-bf16mom", None, jnp.bfloat16, "zero1"),
+    ("qwen-zero1-dots-bf16mom", dict(remat_policy="dots"), jnp.bfloat16,
+     "zero1"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=["he", "mamba", "qwen", "all"],
+                    default="all")
+    ap.add_argument("--out", default="hillclimb_results.jsonl")
+    args = ap.parse_args()
+    if args.cell in ("he", "all"):
+        climb_he(args.out)
+    if args.cell in ("mamba", "all"):
+        climb_lm("falcon-mamba-7b", "train_4k", MAMBA_VARIANTS, args.out)
+    if args.cell in ("qwen", "all"):
+        climb_lm("qwen2.5-32b", "train_4k", QWEN_VARIANTS, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Analytic operation-count model (paper Tables IV, V, X; Figs 6, 7).
+
+Counts follow Table IV exactly:
+  CRT : N·qLimbs·np mul + N·np modmul + N·qLimbs·np ADC
+  NTT : np·(N/2)·logN modmul + np·N·logN add/sub
+  iNTT: np·((N/2)·logN + N) modmul + np·N·logN add/sub
+  iCRT: N·np·PLimbs mul + 2·N·np modmul + N·np·PLimbs ADC
+
+Emulation costs (paper §V-B / Table X, our 16-bit-split TPU variant in
+parentheses): a β-bit mul = 4 half-muls + 5 add + 5 shift; a Shoup modmul =
+1 mulhi (4/3 half-muls) + 2 mullo + compare + sub; ADC = add + compare +
+add. Native-instruction counts assume 1 instr per mul/modmul-step/ADC.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.core.params import HEParams
+
+
+def function_op_counts(N: int, logN: int, qlimbs: int, npn: int,
+                       plimbs: int) -> Dict[str, Dict[str, float]]:
+    return {
+        "CRT": {
+            "mul": N * qlimbs * npn,
+            "modmul": N * npn,
+            "adc": N * qlimbs * npn,
+            "addsub": 0,
+        },
+        "NTT": {
+            "mul": 0,
+            "modmul": npn * (N // 2) * logN,
+            "adc": 0,
+            "addsub": npn * N * logN,
+        },
+        "iNTT": {
+            "mul": 0,
+            "modmul": npn * ((N // 2) * logN + N),
+            "adc": 0,
+            "addsub": npn * N * logN,
+        },
+        "iCRT": {
+            "mul": N * npn * plimbs,
+            "modmul": 2 * N * npn,
+            "adc": N * npn * plimbs,
+            "addsub": 0,
+        },
+    }
+
+
+# instruction costs: (emulated_by_halfword_split, native)
+_COST = {
+    "mul": (14, 1),      # 4 half-muls + 5 add + 5 shift
+    "modmul": (20, 3),   # Shoup: mulhi(4h)+... ≈ 4+5+5 + 2 mullo + cmp + sub
+    "adc": (3, 1),       # add + cmp + add
+    "addsub": (1, 1),
+}
+
+
+def instr_counts(counts: Dict[str, Dict[str, float]], native: bool
+                 ) -> Dict[str, float]:
+    idx = 1 if native else 0
+    return {fn: sum(_COST[k][idx] * v for k, v in ops.items())
+            for fn, ops in counts.items()}
+
+
+def np_for(params: HEParams, logq: int, region: int) -> int:
+    return (params.np_region1(logq) if region == 1
+            else params.np_region2(logq))
+
+
+def plimbs_for(params: HEParams, npn: int) -> int:
+    bits = sum(math.log2(p) for p in params.primes[:npn])
+    return params.limbs_for_bits(int(bits))
+
+
+def hemul_op_counts(params: HEParams, logq: int) -> Dict[str, float]:
+    """Total per-function counts over the full Fig. 2 HE Mul pipeline."""
+    N, logN = params.N, params.logN
+    K = params.qlimbs(logq)
+    total: Dict[str, float] = {}
+    for region, n_crt, n_ntt, n_intt, n_icrt in ((1, 4, 4, 3, 3),
+                                                 (2, 1, 1, 2, 2)):
+        npn = np_for(params, logq, region)
+        pl = plimbs_for(params, npn)
+        per = function_op_counts(N, logN, K, npn, pl)
+        w = {"CRT": n_crt, "NTT": n_ntt, "iNTT": n_intt, "iCRT": n_icrt}
+        for fn, ops in per.items():
+            for k, v in ops.items():
+                total[f"{fn}/{k}"] = total.get(f"{fn}/{k}", 0) + w[fn] * v
+    return total
+
+
+def hemul_total_ops(params: HEParams, logq: int) -> float:
+    return sum(hemul_op_counts(params, logq).values())
+
+
+def data_sizes(params: HEParams, logq: int, region: int) -> Dict[str, int]:
+    """Paper Table V (in units of β words)."""
+    N = params.N
+    K = params.qlimbs(logq)
+    npn = np_for(params, logq, region)
+    pl = plimbs_for(params, npn)
+    return {
+        "CRT_input": N * K,
+        "CRT_table": npn * K,
+        "NTT_input": N * npn,
+        "NTT_table": N * npn,
+        "iCRT_input": N * npn,
+        "iCRT_table": npn + npn * pl,
+    }

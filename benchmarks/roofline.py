@@ -1,0 +1,127 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape) cell.
+
+Reads the dry-run's JSONL records (per-device HLO costs from the compiled
+16×16-mesh modules, scan-corrected — see EXPERIMENTS.md §Roofline
+methodology) and derives, per cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_operand_bytes_per_device / link_bw
+
+(The assignment's chips-denominator is already folded in: partitioned HLO
+shapes are per-device.) Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s
+HBM, 50 GB/s/link ICI.
+
+MODEL_FLOPS = 6·N_params_active·D_tokens (train) or 2·N·D (inference),
+so the MODEL/HLO ratio exposes remat/emulation/dispatch overheads.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256
+
+_PARAM_COUNTS = {  # total / active params (analytic, embeddings included)
+    "llama3.2-1b": (1.24e9, 1.24e9),
+    "h2o-danube-1.8b": (1.83e9, 1.83e9),
+    "phi4-mini-3.8b": (3.84e9, 3.84e9),
+    "qwen2.5-32b": (32.8e9, 32.8e9),
+    "kimi-k2-1t-a32b": (1.04e12, 32.6e9),
+    "arctic-480b": (482e9, 26.6e9),
+    "recurrentgemma-2b": (2.51e9, 2.51e9),
+    "falcon-mamba-7b": (7.27e9, 7.27e9),
+    "whisper-base": (7.25e7, 7.25e7),
+    "llava-next-mistral-7b": (7.24e9, 7.24e9),
+}
+
+_SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 1 * 128,
+    "long_500k": 1 * 1,
+}
+
+
+def model_flops(arch: str, shape: str) -> Optional[float]:
+    if arch not in _PARAM_COUNTS:
+        return None
+    total, active = _PARAM_COUNTS[arch]
+    toks = _SHAPE_TOKENS[shape]
+    if shape == "train_4k":
+        return 6.0 * active * toks
+    return 2.0 * active * toks
+
+
+def analyze_record(rec: dict) -> Optional[dict]:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    a = rec.get("analysis", {})
+    corr = a.get("corrected") or {}
+    flops = corr.get("flops") or a.get("flops")
+    bytes_acc = corr.get("bytes_accessed") or a.get("bytes_accessed")
+    coll = corr.get("collective_bytes")
+    if coll is None:
+        coll = a.get("collectives", {}).get("total_bytes")
+    if flops is None:
+        return None
+    t_c = flops / PEAK_FLOPS
+    t_m = (bytes_acc or 0) / HBM_BW
+    t_l = (coll or 0) / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))
+    arch, _, shape = rec["cell"].partition("/")
+    mf = model_flops(arch, shape)
+    mf_dev = mf / CHIPS if mf else None
+    return {
+        "cell": rec["cell"],
+        "mesh": rec.get("mesh"),
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_l,
+        "bottleneck": dom[1],
+        "step_s_lower_bound": max(t_c, t_m, t_l),
+        "roofline_fraction": dom and t_c / max(t_c, t_m, t_l),
+        "model_flops_per_dev": mf_dev,
+        "model_over_hlo": (mf_dev / flops) if mf_dev else None,
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_acc,
+        "coll_bytes_per_dev": coll,
+    }
+
+
+def load(path: str = "dryrun_results.jsonl", mesh: str = "pod16x16"):
+    rows = {}
+    for line in open(path):
+        rec = json.loads(line)
+        if rec.get("mesh") != mesh:
+            continue
+        r = analyze_record(rec)
+        if r:
+            rows[r["cell"]] = r       # last write wins (re-runs)
+    return list(rows.values())
+
+
+def run(full: bool = False, path: str = "dryrun_results.jsonl") -> None:
+    from benchmarks.common import row
+    try:
+        rows = load(path)
+    except FileNotFoundError:
+        print(f"# roofline: {path} not found — run "
+              "`python -m repro.launch.dryrun --he` first", file=sys.stderr)
+        return
+    for r in sorted(rows, key=lambda r: -r["step_s_lower_bound"]):
+        row(f"roofline/{r['cell']}", r["step_s_lower_bound"] * 1e6,
+            f"bottleneck={r['bottleneck']} "
+            f"compute={r['compute_s']:.3e}s "
+            f"memory={r['memory_s']:.3e}s "
+            f"collective={r['collective_s']:.3e}s "
+            f"model/hlo={r['model_over_hlo'] and round(r['model_over_hlo'], 3)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # default params
+    PYTHONPATH=src python -m benchmarks.run --full     # paper params (slow)
+    PYTHONPATH=src python -m benchmarks.run --only table8
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+import repro.core  # noqa: F401  (x64)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper parameters (logN=16, logQ=1200); slow")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_breakdown, fig67_scaling, roofline, table1_message_vs_cipher,
+        table4_opcounts, table7_opt_ladder, table8_crt_strategies,
+        table9_ntt_radix, table10_instr_model,
+    )
+    modules = [
+        ("table1", table1_message_vs_cipher),
+        ("fig3", fig3_breakdown),
+        ("table4", table4_opcounts),
+        ("table7", table7_opt_ladder),
+        ("table8", table8_crt_strategies),
+        ("table9", table9_ntt_radix),
+        ("table10", table10_instr_model),
+        ("fig67", fig67_scaling),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(full=args.full)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

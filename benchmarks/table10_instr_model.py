@@ -1,0 +1,35 @@
+"""Paper Table X: emulated vs native instruction counts per function.
+
+The paper counts AVX-512 instructions with 64-bit mul/modmul/ADC emulated
+vs hypothetically native. Our TPU adaptation synthesizes 32-bit ops from
+16-bit halves — the same analysis with the same conclusion: CRT and iCRT
+would shrink to ~16-18 % of their instruction streams with native widening
+multiply + carry, NTT/iNTT to ~a third.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_params, row
+from benchmarks.opcount_model import (
+    function_op_counts, instr_counts, np_for, plimbs_for,
+)
+
+
+def run(full: bool = False) -> None:
+    params = bench_params(full)
+    logq = params.logQ
+    npn = np_for(params, logq, 2)
+    pl = plimbs_for(params, npn)
+    counts = function_op_counts(params.N, params.logN, params.qlimbs(logq),
+                                npn, pl)
+    emu = instr_counts(counts, native=False)
+    nat = instr_counts(counts, native=True)
+    for fn in counts:
+        row(f"table10/{fn}/emulated_Minstr", emu[fn] / 1e6,
+            f"native={nat[fn]/1e6:.0f}M "
+            f"ratio={100*nat[fn]/emu[fn]:.1f}% "
+            "(paper: CRT 17.3%, iCRT 15.8%, NTT/iNTT ~33%)")
+
+
+if __name__ == "__main__":
+    run()

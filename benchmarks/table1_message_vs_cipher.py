@@ -1,0 +1,58 @@
+"""Paper Table I: message vs ciphertext op cost (addition, multiplication).
+
+Messages: elementwise complex128 ops on n slots (numpy, per-element cost).
+Ciphertexts: HE Add (limb adds + mask) and HE Mul (the Fig. 2 pipeline),
+also reported per slot-element to match the paper's accounting.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_params, row, timeit
+from repro.core import heaan as H
+from repro.core.keys import keygen
+
+
+def run(full: bool = False) -> None:
+    params = bench_params(full)
+    n = params.n_slots_max
+    rng = np.random.default_rng(0)
+    z1 = rng.normal(size=n) + 1j * rng.normal(size=n)
+    z2 = rng.normal(size=n) + 1j * rng.normal(size=n)
+
+    # message ops (per element)
+    t0 = time.perf_counter()
+    reps = 200
+    for _ in range(reps):
+        _ = z1 + z2
+    t_madd = (time.perf_counter() - t0) / (reps * n)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _ = z1 * z2
+    t_mmul = (time.perf_counter() - t0) / (reps * n)
+
+    sk, pk, evk = keygen(params, seed=0)
+    c1 = H.encrypt_message(z1, pk, params, seed=1)
+    c2 = H.encrypt_message(z2, pk, params, seed=2)
+
+    t_add, _ = timeit(H.he_add, c1, c2, reps=3)
+    t_mul, _ = timeit(H.he_mul, c1, c2, evk, params, reps=1, warmup=1)
+
+    row("table1/message_add_ns_per_elem", t_madd * 1e6,
+        f"{t_madd*1e9:.2f}ns")
+    row("table1/message_mul_ns_per_elem", t_mmul * 1e6,
+        f"{t_mmul*1e9:.2f}ns")
+    row("table1/he_add_us", t_add * 1e6,
+        f"slowdown_vs_msg={t_add/(t_madd*n):.0f}x")
+    row("table1/he_mul_us", t_mul * 1e6,
+        f"slowdown_vs_msg={t_mul/(t_mmul*n):.0f}x "
+        f"(paper: 36112x on 1 CPU thread)")
+    row("table1/he_mul_over_he_add", t_mul / t_add * 1e6 / 1e6,
+        f"{t_mul/t_add:.0f}x (paper: 448x)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Table IV/V: op counts and data sizes of the four major functions."""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_params, row
+from benchmarks.opcount_model import (
+    data_sizes, function_op_counts, np_for, plimbs_for,
+)
+
+
+def run(full: bool = False) -> None:
+    params = bench_params(full)
+    logq = params.logQ
+    for region in (1, 2):
+        npn = np_for(params, logq, region)
+        pl = plimbs_for(params, npn)
+        counts = function_op_counts(params.N, params.logN,
+                                    params.qlimbs(logq), npn, pl)
+        for fn, ops in counts.items():
+            total = sum(ops.values())
+            row(f"table4/r{region}/{fn}", total,
+                f"mul={ops['mul']:.0f};modmul={ops['modmul']:.0f};"
+                f"adc={ops['adc']:.0f};addsub={ops['addsub']:.0f}")
+        sizes = data_sizes(params, logq, region)
+        for k, v in sizes.items():
+            row(f"table5/r{region}/{k}_words", v, f"{v*params.beta_bits//8}B")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Table IX: NTT radix sweep → HBM-traffic model + measured stages.
+
+On GPU the radix sets how many stages run per shared-memory residency:
+HBM round trips = ceil(log2N / log2(radix)); paper measures 2.35×/2.09×
+(NTT/iNTT) at radix-16/32 over radix-2.
+
+On TPU the whole (1, N) row fits VMEM, so the Pallas kernel is single-pass
+("radix-N"): the table reports the modeled HBM bytes per transform for each
+radix and the measured per-stage cost of our in-VMEM pipeline. The derived
+column shows traffic relative to radix-2 — at radix-N it is exactly
+1/log₂N: the paper's optimization direction, taken to its limit.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import bench_params, row, timeit
+from repro.core.context import make_context
+from repro.core.ntt import intt, ntt
+
+
+def run(full: bool = False) -> None:
+    params = bench_params(full)
+    ctx = make_context(params, params.logQ)
+    g = ctx.tables
+    npn, N, logN = ctx.np2, ctx.N, params.logN
+    word = params.beta_bits // 8
+    base_bytes = 2 * npn * N * word          # one read + one write pass
+
+    for radix in (2, 4, 16, 32, N):
+        passes = math.ceil(logN / math.log2(radix))
+        name = f"radix{radix}" if radix != N else "radixN_vmem_resident"
+        row(f"table9/{name}_hbm_MB", passes * base_bytes / 1e6,
+            f"passes={passes} rel_traffic={passes/logN:.3f} "
+            f"(radix2=1.0)")
+
+    rng = np.random.default_rng(0)
+    primes = np.asarray(g.primes[:npn]).astype(np.uint64)
+    x = jnp.asarray((rng.integers(0, 1 << 62, size=(npn, N))
+                     .astype(np.uint64) % primes[:, None])
+                    .astype(g.primes.dtype))
+    t_f, ev = timeit(lambda: ntt(x, jnp.asarray(g.psi_rev[:npn]),
+                                 jnp.asarray(g.psi_rev_shoup[:npn]),
+                                 jnp.asarray(g.primes[:npn])), reps=3)
+    t_i, _ = timeit(lambda: intt(ev, jnp.asarray(g.ipsi_rev[:npn]),
+                                 jnp.asarray(g.ipsi_rev_shoup[:npn]),
+                                 jnp.asarray(g.n_inv[:npn]),
+                                 jnp.asarray(g.n_inv_shoup[:npn]),
+                                 jnp.asarray(g.primes[:npn])), reps=3)
+    row("table9/ntt_measured", t_f * 1e6,
+        f"{npn}x{N}-point, {logN} stages")
+    row("table9/intt_measured", t_i * 1e6,
+        f"iNTT/NTT={t_i/t_f:.2f} (paper: ~1.1-1.25, extra /N pass)")
+
+
+if __name__ == "__main__":
+    run()

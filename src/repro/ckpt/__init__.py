@@ -1,0 +1,5 @@
+"""Checkpointing: atomic, async, keep-k, reshard-on-restore."""
+
+from repro.ckpt.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

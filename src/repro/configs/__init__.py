@@ -1,0 +1,9 @@
+"""Assigned architecture configs (--arch <id>) + the paper's HE workload.
+
+Each module exposes CONFIG (full size, dry-run only) and the shared shape
+set; repro.configs.registry resolves ids.
+"""
+
+from repro.configs.registry import ARCHS, SHAPES, get_arch, get_shapes
+
+__all__ = ["ARCHS", "SHAPES", "get_arch", "get_shapes"]

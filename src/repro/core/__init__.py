@@ -1,0 +1,19 @@
+# The paper's primary contribution — the HEAAN HE-Mul pipeline
+# (CRT → NTT → pointwise → iNTT → iCRT, regions 1+2) — implemented in JAX.
+#
+# β = 2^64 limb arithmetic requires uint64; enable x64 before any tracing.
+# Model code (repro.models) is dtype-explicit, so this is safe globally.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.params import HEParams, paper_params, test_params  # noqa: E402
+from repro.core.context import HEContext, make_context  # noqa: E402
+
+__all__ = [
+    "HEParams",
+    "paper_params",
+    "test_params",
+    "HEContext",
+    "make_context",
+]

@@ -1,0 +1,187 @@
+"""Fixed-width BigInt arithmetic on little-endian limb arrays.
+
+A BigInt is a (..., L) array of β-bit unsigned limbs, value = Σ a_k·β^k,
+interpreted either as unsigned or as two's complement at width β·L (the
+iCRT center-lift and the region-2 rounding shift need signed semantics).
+Because HEAAN's q is a power of two, mod-q is :func:`mask_bits` and
+rescaling is :func:`shift_right_round` — no BigInt division anywhere.
+
+Carry/borrow propagation uses lax.scan over the limb axis (L ≤ ~130).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wordops import mul_wide
+
+__all__ = [
+    "add", "sub", "neg", "mask_bits", "compare_ge",
+    "shift_right_round", "shift_left_bits", "mul_word",
+    "sign_bit", "select",
+]
+
+
+def _scan_limbs(f, a, b, init):
+    """Scan f over the last (limb) axis of a and b with a carry."""
+    a_t = jnp.moveaxis(a, -1, 0)
+    b_t = jnp.moveaxis(b, -1, 0)
+    carry, out = jax.lax.scan(f, init, (a_t, b_t))
+    return jnp.moveaxis(out, 0, -1)
+
+
+def add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a + b) mod β^L, limb-wise with carry."""
+    zero = jnp.zeros(jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]),
+                     dtype=a.dtype)
+
+    def step(carry, ab):
+        x, y = ab
+        s = x + y
+        c1 = (s < x).astype(a.dtype)
+        s2 = s + carry
+        c2 = (s2 < carry).astype(a.dtype)
+        return c1 | c2, s2
+
+    return _scan_limbs(step, a, jnp.broadcast_to(b, a.shape), zero)
+
+
+def sub(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a - b) mod β^L (two's complement on underflow)."""
+    zero = jnp.zeros(jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]),
+                     dtype=a.dtype)
+
+    def step(borrow, ab):
+        x, y = ab
+        d = x - y
+        b1 = (x < y).astype(a.dtype)
+        d2 = d - borrow
+        b2 = (d < borrow).astype(a.dtype)
+        return b1 | b2, d2
+
+    return _scan_limbs(step, a, jnp.broadcast_to(b, a.shape), zero)
+
+
+def neg(a: jnp.ndarray) -> jnp.ndarray:
+    """Two's complement negation mod β^L."""
+    return add(~a, jnp.zeros_like(a).at[..., 0].set(1))
+
+
+def sign_bit(a: jnp.ndarray) -> jnp.ndarray:
+    """Top bit of the top limb (two's complement sign)."""
+    bits = jnp.dtype(a.dtype).itemsize * 8
+    return (a[..., -1] >> (bits - 1)).astype(jnp.bool_)
+
+
+def mask_bits(a: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """a mod 2^bits (zero limbs/bits above). Keeps the limb width."""
+    beta = jnp.dtype(a.dtype).itemsize * 8
+    L = a.shape[-1]
+    w, r = divmod(bits, beta)
+    if w >= L:
+        return a
+    idx = jnp.arange(L)
+    full = idx < w
+    partial = idx == w
+    part_mask = jnp.asarray((1 << r) - 1 if r else 0, a.dtype)
+    limb_mask = jnp.where(full, jnp.asarray(~jnp.zeros((), a.dtype)),
+                          jnp.where(partial, part_mask,
+                                    jnp.zeros((), a.dtype)))
+    return a & limb_mask
+
+
+def compare_ge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Unsigned a >= b, comparing from the most significant limb."""
+    b = jnp.broadcast_to(b, a.shape)
+
+    def step(state, ab):
+        x, y = ab
+        decided, ge = state
+        new_ge = jnp.where(decided, ge, x > y)
+        new_decided = decided | (x != y)
+        return (new_decided, new_ge), 0
+
+    init = (jnp.zeros(a.shape[:-1], jnp.bool_),
+            jnp.ones(a.shape[:-1], jnp.bool_))   # equal -> ge
+    a_t = jnp.flip(jnp.moveaxis(a, -1, 0), 0)
+    b_t = jnp.flip(jnp.moveaxis(b, -1, 0), 0)
+    (decided, ge), _ = jax.lax.scan(step, init, (a_t, b_t))
+    return jnp.where(decided, ge, True)
+
+
+def shift_left_bits(a: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(a << s) mod β^L; s is a static python int."""
+    beta = jnp.dtype(a.dtype).itemsize * 8
+    w, r = divmod(s, beta)
+    L = a.shape[-1]
+    if w:
+        pad = jnp.zeros(a.shape[:-1] + (w,), a.dtype)
+        a = jnp.concatenate([pad, a[..., : L - w]], axis=-1)
+    if r:
+        lo = a << r
+        hi_in = jnp.concatenate(
+            [jnp.zeros(a.shape[:-1] + (1,), a.dtype), a[..., :-1]], axis=-1)
+        a = lo | (hi_in >> (beta - r))
+    return a
+
+
+def shift_right_round(a: jnp.ndarray, s: int, *, arithmetic: bool = True,
+                      out_limbs: int | None = None) -> jnp.ndarray:
+    """round(a / 2^s) with round-half-up; a is two's complement at width β·L.
+
+    Used for the region-2 key-switch shift (÷Q, paper Fig. 2) and for
+    rescaling (÷p). s is static. Result width is out_limbs (default L).
+    """
+    beta = jnp.dtype(a.dtype).itemsize * 8
+    L = a.shape[-1]
+    # +2^(s-1) for rounding (two's complement safe).
+    if s > 0:
+        half = jnp.zeros_like(a)
+        w_h, r_h = divmod(s - 1, beta)
+        if w_h < L:
+            half = half.at[..., w_h].set(jnp.asarray(1 << r_h, a.dtype))
+        a = add(a, half)
+    w, r = divmod(s, beta)
+    sign = sign_bit(a)
+    ext = jnp.where(sign[..., None], jnp.asarray(~jnp.zeros((), a.dtype)),
+                    jnp.zeros((), a.dtype)) if arithmetic else jnp.zeros(
+        a.shape[:-1] + (1,), a.dtype)
+    ext = jnp.broadcast_to(ext, a.shape[:-1] + (max(w, 1) + 1,))
+    a_ext = jnp.concatenate([a, ext.astype(a.dtype)], axis=-1)
+    shifted = a_ext[..., w: w + L]
+    if r:
+        hi_next = a_ext[..., w + 1: w + 1 + L]
+        shifted = (shifted >> r) | (hi_next << (beta - r))
+    if out_limbs is not None and out_limbs != L:
+        if out_limbs < L:
+            shifted = shifted[..., :out_limbs]
+        else:
+            sign2 = sign_bit(shifted)
+            pad = jnp.where(
+                sign2[..., None], jnp.asarray(~jnp.zeros((), a.dtype)),
+                jnp.zeros((), a.dtype))
+            pad = jnp.broadcast_to(pad, shifted.shape[:-1]
+                                   + (out_limbs - L,)).astype(a.dtype)
+            shifted = jnp.concatenate([shifted, pad], axis=-1)
+    return shifted
+
+
+def mul_word(a: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """(a · s) mod β^L for a word-sized scalar s (broadcast over batch)."""
+    s = jnp.asarray(s, a.dtype)
+    s_b = jnp.broadcast_to(s[..., None], a.shape)
+
+    def step(carry, ab):
+        x, y = ab
+        hi, lo = mul_wide(x, y)
+        out = lo + carry
+        c = (out < lo).astype(a.dtype)
+        return hi + c, out             # hi ≤ β-2, so hi + c cannot wrap
+
+    return _scan_limbs(step, a, s_b, jnp.zeros(a.shape[:-1], a.dtype))
+
+
+def select(cond: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise limb select: cond is (...,) bool, a/b are (..., L)."""
+    return jnp.where(cond[..., None], a, b)

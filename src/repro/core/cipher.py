@@ -1,0 +1,52 @@
+"""Ciphertext / plaintext / key containers (JAX pytrees)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Ciphertext:
+    """HEAAN ciphertext: a pair of mod-q polynomials (paper §III-A).
+
+    ax/bx: (N, qlimbs) little-endian limb arrays, coefficients in [0, q).
+    logq/logp/n_slots are static metadata.
+    """
+    ax: jnp.ndarray
+    bx: jnp.ndarray
+    logq: int = dataclasses.field(metadata=dict(static=True))
+    logp: int = dataclasses.field(metadata=dict(static=True))
+    n_slots: int = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PublicKey:
+    """pk = (bx, ax) with bx = -ax·s + e mod Q."""
+    ax: jnp.ndarray   # (N, QLimbs)
+    bx: jnp.ndarray
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EvalKey:
+    """evk over Q², stored CRT'd + NTT'd at the maximal region-2 prime set
+    (HEAAN 2.1 'faster multiplication'), with Shoup companions.
+
+    ax_ev/bx_ev: (np2_max, N); *_shoup alongside.
+    """
+    ax_ev: jnp.ndarray
+    ax_ev_shoup: jnp.ndarray
+    bx_ev: jnp.ndarray
+    bx_ev_shoup: jnp.ndarray
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SecretKey:
+    """Ternary secret with Hamming weight h (host-visible for tests only)."""
+    s: jnp.ndarray    # (N,) int8 in {-1, 0, 1}

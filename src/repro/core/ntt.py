@@ -1,0 +1,100 @@
+"""Negacyclic NTT / iNTT over the RNS primes (paper Algo 3/4).
+
+Forward: merged-ψ Cooley-Tukey (natural order in, bit-reversed out), exactly
+the paper's Algo 3 with TB_W[m+j] = ψ^brv(m+j). Inverse: Gentleman-Sande
+with ψ⁻¹ twiddles (bit-reversed in, natural out) and a final N⁻¹ scale —
+the paper notes iNTT's extra elementwise division by N (§IV).
+
+Pointwise ciphertext products stay in the bit-reversed eval domain, so the
+permutation never materializes. All modmuls are Shoup (paper Algo 2); the
+modified-Shoup variant (3 half-muls, §V-B) is selectable.
+
+Data layout is (np, N) with N minor — on TPU this puts butterflies on the
+128-lane axis (the paper's "matrix transposed for SIMD locality" point).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wordops import (
+    modadd, modsub, shoup_modmul, shoup_modmul_modified,
+)
+
+__all__ = ["ntt", "intt", "pointwise_shoup_scale"]
+
+
+def _modmul(modified: bool):
+    return shoup_modmul_modified if modified else shoup_modmul
+
+
+@partial(jax.jit, static_argnames=("modified",))
+def ntt(x: jnp.ndarray, psi_rev: jnp.ndarray, psi_rev_shoup: jnp.ndarray,
+        primes: jnp.ndarray, *, modified: bool = False) -> jnp.ndarray:
+    """Forward negacyclic NTT.
+
+    x: (np, N) residues in natural order  ->  (np, N) bit-reversed eval.
+    psi_rev[j, k] = ψ_j^brv(k); primes: (np,).
+    """
+    npn, N = x.shape
+    mm = _modmul(modified)
+    p = primes[:, None, None]
+    t = N
+    m = 1
+    while m < N:
+        t //= 2
+        # groups: (np, m, 2, t); twiddle S = psi_rev[:, m + i] per group i.
+        xr = x.reshape(npn, m, 2, t)
+        u = xr[:, :, 0, :]
+        v = xr[:, :, 1, :]
+        s = psi_rev[:, m: 2 * m, None]
+        s_sh = psi_rev_shoup[:, m: 2 * m, None]
+        vv = mm(v, s, s_sh, p)
+        x = jnp.stack([modadd(u, vv, p), modsub(u, vv, p)],
+                      axis=2).reshape(npn, N)
+        m *= 2
+    return x
+
+
+@partial(jax.jit, static_argnames=("modified",))
+def intt(x: jnp.ndarray, ipsi_rev: jnp.ndarray, ipsi_rev_shoup: jnp.ndarray,
+         n_inv: jnp.ndarray, n_inv_shoup: jnp.ndarray,
+         primes: jnp.ndarray, *, modified: bool = False) -> jnp.ndarray:
+    """Inverse negacyclic NTT (Gentleman-Sande).
+
+    x: (np, N) bit-reversed eval  ->  (np, N) natural-order residues.
+    """
+    npn, N = x.shape
+    mm = _modmul(modified)
+    p = primes[:, None, None]
+    t = 1
+    m = N
+    while m > 1:
+        h = m // 2
+        xr = x.reshape(npn, h, 2, t)
+        u = xr[:, :, 0, :]
+        v = xr[:, :, 1, :]
+        s = ipsi_rev[:, h: 2 * h, None]
+        s_sh = ipsi_rev_shoup[:, h: 2 * h, None]
+        lo = modadd(u, v, p)
+        hi = mm(modsub(u, v, p), s, s_sh, p)
+        x = jnp.stack([lo, hi], axis=2).reshape(npn, N)
+        t *= 2
+        m = h
+    # final elementwise ·N⁻¹ (paper §IV: iNTT's extra division by N)
+    return _modmul(modified)(x, n_inv[:, None], n_inv_shoup[:, None],
+                             primes[:, None])
+
+
+def pointwise_shoup_scale(x: jnp.ndarray, y: jnp.ndarray, y_shoup: jnp.ndarray,
+                          primes: jnp.ndarray, *, modified: bool = False
+                          ) -> jnp.ndarray:
+    """Elementwise x·y mod p where y has precomputed Shoup companions.
+
+    Used for evk products (evk is precomputed in the eval domain, so its
+    Shoup companions are too) and for the iCRT Hadamard step.
+    """
+    return _modmul(modified)(x, y, y_shoup, primes[:, None])

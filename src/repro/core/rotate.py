@@ -1,0 +1,145 @@
+"""Galois rotations and conjugation (HEAAN leftRotate / conjugate).
+
+Slot rotation by r steps is the ring automorphism σ_k : t(X) → t(X^k),
+k = 5^r mod 2N (conjugation: k = 2N−1). On coefficients, index i maps to
+i·k mod 2N with a sign flip when the image lands in [N, 2N) — a static
+permutation + negation, precomputed host-side per k.
+
+A rotated ciphertext decrypts under σ_k(s), so a key-switch with the
+rotation key rk_k = (a, −a·s + e + Q·σ_k(s)) mod Q² follows — the SAME
+region-2 machinery as HE Mul (paper Fig. 2); rotations therefore ride the
+exact pipeline this framework accelerates.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import bigint, rns
+from repro.core.cipher import Ciphertext, EvalKey, SecretKey
+from repro.core.context import build_global_tables, make_context, _shoup_vec
+from repro.core.params import HEParams
+from repro.core.rns import DEFAULT, PipelineConfig
+
+__all__ = ["rot_keygen", "he_rotate", "he_conjugate", "automorphism_poly",
+           "rotation_k"]
+
+
+def rotation_k(params: HEParams, r: int) -> int:
+    """Galois element for a left-rotation by r slots."""
+    return pow(5, r, 2 * params.N)
+
+
+@lru_cache(maxsize=None)
+def _auto_maps(N: int, k: int):
+    """(dest index, negate?) for coefficient i -> i·k mod 2N."""
+    idx = (np.arange(N, dtype=np.int64) * k) % (2 * N)
+    neg = idx >= N
+    return idx % N, neg
+
+
+def automorphism_poly(poly: jnp.ndarray, params: HEParams, k: int,
+                      logq: int) -> jnp.ndarray:
+    """Apply σ_k to a mod-q limb polynomial (N, L)."""
+    dest, neg = _auto_maps(params.N, k)
+    out = jnp.zeros_like(poly)
+    negated = bigint.mask_bits(bigint.neg(poly), logq)
+    src = jnp.where(jnp.asarray(neg)[:, None], negated, poly)
+    return out.at[jnp.asarray(dest)].set(src)
+
+
+def _galois_key(params: HEParams, s: np.ndarray, k: int, seed: int,
+                cfg: PipelineConfig) -> EvalKey:
+    """Key-switching key from σ_k(s) to s over Q² (same shape as evk)."""
+    from repro.core.keys import sample_gauss, sample_uniform_limbs
+    g = build_global_tables(params)
+    N, beta, logQ = params.N, params.beta_bits, params.logQ
+    q2limbs = params.limbs_for_bits(2 * logQ)
+    rng = np.random.default_rng(seed)
+
+    # σ_k(s) on the small-int secret (sign tracked directly)
+    dest, neg = _auto_maps(N, k)
+    s_rot = np.zeros_like(s)
+    s_rot[dest] = np.where(neg, -s.astype(np.int64), s.astype(np.int64))
+
+    ax = sample_uniform_limbs(rng, N, 2 * logQ, q2limbs, beta)
+    np_kk = params.np_for_bits(params.primes, 2 * logQ + params.logN + 3)
+    as_prod = rns.from_eval(
+        rns.eval_mul(rns.to_eval(ax, np_kk, g, cfg),
+                     rns.to_eval_small(jnp.asarray(s), np_kk, g, cfg),
+                     g, cfg), params, q2limbs, g, cfg)
+    e = rns.small_ints_to_limbs(sample_gauss(rng, N, params.sigma),
+                                q2limbs, beta)
+    srot_limbs = rns.small_ints_to_limbs(s_rot, q2limbs, beta)
+    q_srot = bigint.shift_left_bits(srot_limbs, logQ)
+    bx = bigint.mask_bits(
+        bigint.add(bigint.add(bigint.neg(as_prod), e), q_srot), 2 * logQ)
+
+    np2_max = params.np_region2(logQ)
+    ax_ev = rns.to_eval(ax, np2_max, g, cfg)
+    bx_ev = rns.to_eval(bx, np2_max, g, cfg)
+    primes_np = np.asarray(g.primes[:np2_max])
+    return EvalKey(
+        ax_ev=ax_ev,
+        ax_ev_shoup=jnp.asarray(_shoup_vec(np.asarray(ax_ev), primes_np,
+                                           beta)),
+        bx_ev=bx_ev,
+        bx_ev_shoup=jnp.asarray(_shoup_vec(np.asarray(bx_ev), primes_np,
+                                           beta)))
+
+
+def rot_keygen(params: HEParams, sk: SecretKey, r: int, seed: int = 100,
+               cfg: PipelineConfig = DEFAULT) -> EvalKey:
+    """Rotation key for a left-rotation by r slots."""
+    return _galois_key(params, np.asarray(sk.s), rotation_k(params, r),
+                       seed + r, cfg)
+
+
+def conj_keygen(params: HEParams, sk: SecretKey, seed: int = 200,
+                cfg: PipelineConfig = DEFAULT) -> EvalKey:
+    return _galois_key(params, np.asarray(sk.s), 2 * params.N - 1, seed,
+                       cfg)
+
+
+def _apply_galois(ct: Ciphertext, k: int, key: EvalKey, params: HEParams,
+                  cfg: PipelineConfig) -> Ciphertext:
+    logq = ct.logq
+    ctx = make_context(params, logq)
+    g = ctx.tables
+    qlimbs = ctx.qlimbs
+    np2 = ctx.np2
+    ks_limbs = params.limbs_for_bits(logq + params.logQ) + 1
+
+    ax_r = automorphism_poly(ct.ax[:, :qlimbs], params, k, logq)
+    bx_r = automorphism_poly(ct.bx[:, :qlimbs], params, k, logq)
+
+    e2 = rns.to_eval(ax_r, np2, g, cfg)
+    ks_ax = rns.from_eval(
+        rns.eval_mul_shoup(e2, key.ax_ev[:np2], key.ax_ev_shoup[:np2],
+                           g, cfg), params, ks_limbs, g, cfg)
+    ks_bx = rns.from_eval(
+        rns.eval_mul_shoup(e2, key.bx_ev[:np2], key.bx_ev_shoup[:np2],
+                           g, cfg), params, ks_limbs, g, cfg)
+    ks_ax = bigint.shift_right_round(ks_ax, params.logQ, out_limbs=qlimbs)
+    ks_bx = bigint.shift_right_round(ks_bx, params.logQ, out_limbs=qlimbs)
+
+    return Ciphertext(
+        ax=bigint.mask_bits(ks_ax, logq),
+        bx=bigint.mask_bits(bigint.add(bx_r, ks_bx), logq),
+        logq=logq, logp=ct.logp, n_slots=ct.n_slots)
+
+
+def he_rotate(ct: Ciphertext, r: int, rk: EvalKey, params: HEParams,
+              cfg: PipelineConfig = DEFAULT) -> Ciphertext:
+    """Rotate message slots left by r (rk must be keyed for the same r)."""
+    return _apply_galois(ct, rotation_k(params, r), rk, params, cfg)
+
+
+def he_conjugate(ct: Ciphertext, ck: EvalKey, params: HEParams,
+                 cfg: PipelineConfig = DEFAULT) -> Ciphertext:
+    """Complex-conjugate every slot."""
+    return _apply_galois(ct, 2 * params.N - 1, ck, params, cfg)

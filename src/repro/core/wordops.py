@@ -1,0 +1,196 @@
+"""Word-level modular arithmetic, synthesized from half-word multiplies.
+
+This is the paper's §V-B "emulating arithmetic operations" story adapted to
+TPU: the TPU VPU (like AVX-512 in the paper) has no widening multiply and no
+carry flags, so a β-bit mulhi is synthesized from four (or three, in the
+paper's *modified Shoup*) half-word multiplies. Everything here is pure jnp
+on unsigned ints and is shared verbatim by:
+
+  - the pure-JAX HEAAN pipeline (β = 2^64 on CPU, β = 2^32 anywhere), and
+  - the Pallas kernel bodies (β = 2^32, TPU-native).
+
+All functions are shape-polymorphic (elementwise) and exact; they are tested
+against python-int oracles in tests/test_wordops.py.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "mul_wide", "mulhi", "mullo", "mulhi_approx3",
+    "modadd", "modsub", "cond_reduce",
+    "shoup_modmul", "shoup_modmul_modified",
+    "mont_redc", "mont_modmul",
+    "add_wide", "acc3_add_product",
+    "barrett_modmul_ref",
+]
+
+
+def _half_bits(dtype) -> int:
+    return jnp.dtype(dtype).itemsize * 4
+
+
+def _full_bits(dtype) -> int:
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def mul_wide(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full β×β→2β product via four half-word multiplies. Returns (hi, lo).
+
+    The partial-product recombination never overflows β bits:
+    (2^h-1)^2 + (2^h-1) < 2^(2h).
+    """
+    dt = a.dtype
+    h = _half_bits(dt)
+    mask = jnp.array((1 << h) - 1, dt)
+    al, ah = a & mask, a >> h
+    bl, bh = b & mask, b >> h
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = lh + (ll >> h)            # no overflow (see docstring)
+    mid2 = hl + (mid & mask)        # no overflow
+    lo = (mid2 << h) | (ll & mask)
+    hi = hh + (mid >> h) + (mid2 >> h)
+    return hi, lo
+
+
+def mulhi(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return mul_wide(a, b)[0]
+
+
+def mullo(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Low β bits of the product — native wrap-around multiply."""
+    return a * b
+
+
+def mulhi_approx3(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Approximate mulhi with THREE half-word muls (paper's modified Shoup).
+
+    Drops the lo·lo partial product (used only for its carry). The result
+    underestimates the true mulhi by at most 2, so a Shoup quotient from it
+    yields a remainder in [0, 4p) (paper §V-B) — fixed by two conditional
+    subtractions downstream.
+    """
+    dt = a.dtype
+    h = _half_bits(dt)
+    mask = jnp.array((1 << h) - 1, dt)
+    al, ah = a & mask, a >> h
+    bl, bh = b & mask, b >> h
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid2 = hl + (lh & mask)
+    return hh + (lh >> h) + (mid2 >> h)
+
+
+# ---- modular add/sub -------------------------------------------------------
+
+def modadd(a, b, p):
+    """(a + b) mod p for a, b in [0, p). p < β/2 so no wrap."""
+    s = a + b
+    return jnp.where(s >= p, s - p, s)
+
+
+def modsub(a, b, p):
+    """(a - b) mod p for a, b in [0, p)."""
+    d = a + p - b
+    return jnp.where(d >= p, d - p, d)
+
+
+def cond_reduce(x, p, kmax: int):
+    """Reduce x < kmax·p to [0, p) by conditional power-of-two subtractions.
+
+    Requires kmax·p < β (caller guarantees via prime-size headroom).
+    """
+    k = 1
+    while k < kmax:
+        k *= 2
+    k //= 2
+    while k >= 1:
+        kp = p * jnp.asarray(k, x.dtype)
+        x = jnp.where(x >= kp, x - kp, x)
+        k //= 2
+    return x
+
+
+# ---- Shoup modular multiplication (paper Algo 2) --------------------------
+
+def shoup_modmul(x, y, y_shoup, p):
+    """mod(x·y, p) with precomputed y_shoup = floor(y·β/p). Requires p < β/4.
+
+    3 multiplies total: one synthesized mulhi (4 half-muls) + two native
+    wrap-around mullos. Result is exact in [0, p).
+    """
+    qu = mulhi(x, y_shoup)
+    r = x * y - qu * p          # wraps mod β; true value < 2p
+    return jnp.where(r >= p, r - p, r)
+
+
+def shoup_modmul_modified(x, y, y_shoup, p):
+    """Paper's modified Shoup: approximate mulhi (3 half-muls), r in [0,4p)."""
+    qu = mulhi_approx3(x, y_shoup)
+    r = x * y - qu * p          # wraps mod β; true value < 4p
+    two_p = p + p
+    r = jnp.where(r >= two_p, r - two_p, r)
+    return jnp.where(r >= p, r - p, r)
+
+
+# ---- Montgomery (for unknown×unknown pointwise products) -------------------
+
+def mont_redc(t_hi, t_lo, p, pprime):
+    """REDC: (t_hi·β + t_lo)·β⁻¹ mod p, for t < p·β. pprime = -p⁻¹ mod β."""
+    m = t_lo * pprime                       # mod β
+    mp_hi, _ = mul_wide(m, p)               # m·p ≡ -t_lo (mod β)
+    carry = (t_lo != 0).astype(t_lo.dtype)  # (t_lo + mp_lo) carries iff t_lo≠0
+    t = t_hi + mp_hi + carry                # < 2p
+    return jnp.where(t >= p, t - p, t)
+
+
+def mont_modmul(a, b, p, pprime, r2):
+    """mod(a·b, p) via two REDCs (r2 = β² mod p). Domain-free."""
+    hi, lo = mul_wide(a, b)
+    t = mont_redc(hi, lo, p, pprime)        # a·b·β⁻¹ mod p
+    hi2, lo2 = mul_wide(t, r2)
+    return mont_redc(hi2, lo2, p, pprime)   # a·b mod p
+
+
+# ---- wide accumulation (paper's ADC / GPU-C strategy) ----------------------
+
+def add_wide(acc_hi, acc_lo, hi, lo):
+    """(acc_hi, acc_lo) += (hi, lo) with synthesized carry. 2-word accum."""
+    new_lo = acc_lo + lo
+    carry = (new_lo < lo).astype(acc_lo.dtype)
+    new_hi = acc_hi + hi + carry
+    return new_hi, new_lo
+
+
+def acc3_add_product(acc2, acc1, acc0, a, b):
+    """3-word accumulator += a·b (paper's GPU-C: ADC chains, no modulo)."""
+    hi, lo = mul_wide(a, b)
+    new0 = acc0 + lo
+    c0 = (new0 < lo).astype(acc0.dtype)
+    new1 = acc1 + hi
+    c1 = (new1 < hi).astype(acc1.dtype)
+    new1b = new1 + c0
+    c1b = (new1b < c0).astype(acc1.dtype)
+    new2 = acc2 + c1 + c1b
+    return new2, new1b, new0
+
+
+# ---- reference (division-based) -------------------------------------------
+
+def barrett_modmul_ref(a, b, p):
+    """Division-based reference modmul for β=2^32 (widens to u64 + rem).
+
+    Exact oracle on CPU; never used in the optimized paths. For β=2^64 use
+    the python-int oracles in tests (no 128-bit hardware type exists).
+    """
+    if a.dtype != jnp.uint32:
+        raise NotImplementedError("u64 reference lives in python-int oracles")
+    wide = jnp.uint64
+    return (a.astype(wide) * b.astype(wide) % p.astype(wide)).astype(a.dtype)

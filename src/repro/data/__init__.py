@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic token streams, packing, sharding."""
+
+from repro.data.synthetic import SyntheticLM, make_batch_specs
+
+__all__ = ["SyntheticLM", "make_batch_specs"]

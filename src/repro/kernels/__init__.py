@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the HE Mul hot spots the paper optimizes.
+
+Four kernels, mirroring the paper's §IV decomposition (CRT / NTT / iNTT /
+iCRT ≥ 95.8 % of HE Mul) plus the pointwise modmul stage:
+
+  ntt/     VMEM-resident all-stage negacyclic (i)NTT — the TPU limit of the
+           paper's high-radix argument (HBM round trips: log₂N → 1).
+  crt/     blocked RNS conversion with 3-word ADC accumulation (GPU-C).
+  icrt/    loop-reordered Algo-6 matmul with in-kernel limb assembly.
+  modmul/  pointwise Montgomery products (unknown×unknown residues).
+
+All arithmetic is β = 2^32 synthesized from 16-bit partial products
+(TPU VPUs have no widening multiply / carry flags — see DESIGN.md §2).
+Each kernel ships ops.py (jit wrapper; auto-interpret off-TPU) and ref.py
+(pure-jnp oracle); tests sweep shapes and assert exact equality.
+"""

@@ -1,0 +1,21 @@
+"""Shared kernel plumbing: interpret-mode detection and tiling helpers."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["use_interpret", "pick_block"]
+
+
+def use_interpret() -> bool:
+    """Pallas kernels execute in interpret mode off-TPU (this container is
+    CPU-only; TPU v5e is the compile target, not the runtime)."""
+    return jax.default_backend() != "tpu"
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of n that is ≤ preferred (block shapes must tile)."""
+    b = min(n, preferred)
+    while n % b:
+        b -= 1
+    return b

@@ -1,0 +1,15 @@
+"""Jit'd public wrapper for the Pallas CRT kernel (β = 2^32 only)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.crt.crt import crt_pallas
+
+__all__ = ["crt_op"]
+
+
+def crt_op(x, tb, tb_shoup, primes, *, strategy: str = "acc3"):
+    """(N, K) limbs -> (np, N) residues. Strategies: acc3 | mod2 | mod4."""
+    assert x.dtype == jnp.uint32, "Pallas kernels are β=2^32 (TPU-native)"
+    return crt_pallas(x, tb, tb_shoup, primes, strategy=strategy)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the Pallas CRT kernel."""
+
+from __future__ import annotations
+
+from repro.core.crt import crt as _crt
+
+__all__ = ["crt_ref"]
+
+
+def crt_ref(x, tb, tb_shoup, primes, *, strategy: str = "matmul"):
+    return _crt(x, tb, tb_shoup, primes, strategy=strategy)

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the Pallas iCRT kernel (β = 2^32 only).
+
+Kernel: Hadamard + reordered matmul + limb assembly + fixed-point quotient.
+JAX tail: −s·P, ±1 corrections, center-lift (core.crt.finalize_accum).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.context import GlobalTables, IcrtTables
+from repro.core.crt import finalize_accum
+from repro.kernels.icrt.icrt import icrt_accum_pallas
+
+__all__ = ["icrt_op"]
+
+
+def icrt_op(r, tabs: IcrtTables, g: GlobalTables, out_limbs: int):
+    """(np, N) eval residues -> (N, out_limbs) centered two's complement."""
+    assert r.dtype == jnp.uint32, "Pallas kernels are β=2^32 (TPU-native)"
+    npn = r.shape[0]
+    accum, s = icrt_accum_pallas(
+        r, jnp.asarray(tabs.inv_P), jnp.asarray(tabs.inv_P_shoup),
+        jnp.asarray(tabs.pdivp), jnp.asarray(tabs.quot_fix),
+        jnp.asarray(g.primes[:npn]), accum_limbs=tabs.accum_limbs)
+    return finalize_accum(accum, s, jnp.asarray(tabs.P_limbs),
+                          jnp.asarray(tabs.P_half_limbs), out_limbs)

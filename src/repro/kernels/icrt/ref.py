@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Pallas iCRT kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.context import GlobalTables, IcrtTables
+from repro.core.crt import icrt as _icrt
+
+__all__ = ["icrt_ref"]
+
+
+def icrt_ref(r, tabs: IcrtTables, g: GlobalTables, out_limbs: int,
+             strategy: str = "matmul"):
+    npn = r.shape[0]
+    return _icrt(r, tabs, jnp.asarray(g.primes[:npn]),
+                 jnp.asarray(tabs.inv_P), jnp.asarray(tabs.inv_P_shoup),
+                 jnp.asarray(tabs.pdivp), jnp.asarray(tabs.P_limbs),
+                 jnp.asarray(tabs.P_half_limbs),
+                 jnp.asarray(g.p_inv_f64[:npn]),
+                 out_limbs=out_limbs, strategy=strategy)

@@ -1,0 +1,14 @@
+"""Jit'd public wrapper for the Pallas pointwise-modmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.modmul.modmul import pointwise_mont_pallas
+
+__all__ = ["pointwise_mont_op"]
+
+
+def pointwise_mont_op(a, b, primes, pprime, r2):
+    assert a.dtype == jnp.uint32, "Pallas kernels are β=2^32 (TPU-native)"
+    return pointwise_mont_pallas(a, b, primes, pprime, r2)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the pointwise-modmul kernel."""
+
+from __future__ import annotations
+
+from repro.core.wordops import mont_modmul
+
+__all__ = ["pointwise_mont_ref"]
+
+
+def pointwise_mont_ref(a, b, primes, pprime, r2):
+    return mont_modmul(a, b, primes[:, None], pprime[:, None], r2[:, None])

@@ -1,0 +1,121 @@
+"""VMEM-resident negacyclic NTT / iNTT Pallas kernels (β = 2^32).
+
+TPU adaptation of the paper's high-radix NTT (§V-C, Table IX): on a GPU the
+paper raises the radix to cut HBM round trips of the (np, N) working set
+from log₂N to log_kN. TPU VMEM (~16 MiB/core) holds an entire N-point row
+(N = 2^16 → 256 KiB of u32), so the kernel streams the matrix ONCE, runs
+ALL log₂N butterfly stages on-chip, and writes ONCE — radix-N in the
+paper's terms, the logical limit of its argument.
+
+Grid: one step per block of `rows` primes (the paper's np-degree
+parallelism maps to the grid/sublane dimension; butterflies ride the
+128-lane axis). Twiddles (values + Shoup companions) ride along per row.
+
+All modmuls are Shoup (paper Algo 2) built on 16-bit-split mulhi
+(DESIGN.md §2 — no widening multiply on TPU VPUs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.wordops import (
+    modadd, modsub, shoup_modmul, shoup_modmul_modified,
+)
+from repro.kernels.common import pick_block, use_interpret
+
+
+def _ntt_kernel(x_ref, psi_ref, psi_sh_ref, p_ref, o_ref, *, modified):
+    rows, N = x_ref.shape
+    mm = shoup_modmul_modified if modified else shoup_modmul
+    x = x_ref[...]
+    psi = psi_ref[...]
+    psi_sh = psi_sh_ref[...]
+    p = p_ref[...][:, :, None]          # (rows, 1, 1)
+    t, m = N, 1
+    while m < N:                         # log₂N stages, all in VMEM
+        t //= 2
+        xr = x.reshape(rows, m, 2, t)
+        u = xr[:, :, 0, :]
+        v = xr[:, :, 1, :]
+        s = psi[:, m: 2 * m, None]
+        s_sh = psi_sh[:, m: 2 * m, None]
+        vv = mm(v, s, s_sh, p)
+        x = jnp.stack([modadd(u, vv, p), modsub(u, vv, p)],
+                      axis=2).reshape(rows, N)
+        m *= 2
+    o_ref[...] = x
+
+
+def _intt_kernel(x_ref, ipsi_ref, ipsi_sh_ref, ninv_ref, ninv_sh_ref,
+                 p_ref, o_ref, *, modified):
+    rows, N = x_ref.shape
+    mm = shoup_modmul_modified if modified else shoup_modmul
+    x = x_ref[...]
+    ipsi = ipsi_ref[...]
+    ipsi_sh = ipsi_sh_ref[...]
+    p3 = p_ref[...][:, :, None]
+    t, m = 1, N
+    while m > 1:                         # Gentleman-Sande stages
+        h = m // 2
+        xr = x.reshape(rows, h, 2, t)
+        u = xr[:, :, 0, :]
+        v = xr[:, :, 1, :]
+        s = ipsi[:, h: 2 * h, None]
+        s_sh = ipsi_sh[:, h: 2 * h, None]
+        lo = modadd(u, v, p3)
+        hi = mm(modsub(u, v, p3), s, s_sh, p3)
+        x = jnp.stack([lo, hi], axis=2).reshape(rows, N)
+        t *= 2
+        m = h
+    # final elementwise ·N⁻¹ (paper §IV)
+    o_ref[...] = mm(x, ninv_ref[...], ninv_sh_ref[...], p_ref[...])
+
+
+def _rows_for(npn: int, N: int) -> int:
+    # VMEM budget ≈ 6 live row-sized arrays (x, ψ, ψ_shoup, out, temps).
+    budget_words = (4 << 20) // 4
+    return pick_block(npn, max(1, budget_words // (6 * N)))
+
+
+@functools.partial(jax.jit, static_argnames=("modified", "interpret"))
+def ntt_pallas(x, psi_rev, psi_rev_shoup, primes, *, modified=False,
+               interpret=None):
+    """(np, N) natural-order residues -> bit-reversed eval domain."""
+    npn, N = x.shape
+    rows = _rows_for(npn, N)
+    interp = use_interpret() if interpret is None else interpret
+    row_spec = pl.BlockSpec((rows, N), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_ntt_kernel, modified=modified),
+        grid=(npn // rows,),
+        in_specs=[row_spec, row_spec, row_spec,
+                  pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((npn, N), x.dtype),
+        interpret=interp,
+    )(x, psi_rev, psi_rev_shoup, primes[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("modified", "interpret"))
+def intt_pallas(x, ipsi_rev, ipsi_rev_shoup, n_inv, n_inv_shoup, primes, *,
+                modified=False, interpret=None):
+    """(np, N) bit-reversed eval domain -> natural-order residues."""
+    npn, N = x.shape
+    rows = _rows_for(npn, N)
+    interp = use_interpret() if interpret is None else interpret
+    row_spec = pl.BlockSpec((rows, N), lambda i: (i, 0))
+    col_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_intt_kernel, modified=modified),
+        grid=(npn // rows,),
+        in_specs=[row_spec, row_spec, row_spec, col_spec, col_spec, col_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((npn, N), x.dtype),
+        interpret=interp,
+    )(x, ipsi_rev, ipsi_rev_shoup, n_inv[:, None], n_inv_shoup[:, None],
+      primes[:, None])

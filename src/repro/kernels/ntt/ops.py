@@ -1,0 +1,19 @@
+"""Jit'd public wrappers for the Pallas NTT/iNTT kernels."""
+
+from __future__ import annotations
+
+from repro.kernels.ntt.ntt import intt_pallas, ntt_pallas
+
+__all__ = ["ntt_op", "intt_op"]
+
+
+def ntt_op(x, psi_rev, psi_rev_shoup, primes, *, modified: bool = False):
+    """Forward negacyclic NTT: (np, N) residues -> bit-reversed eval."""
+    return ntt_pallas(x, psi_rev, psi_rev_shoup, primes, modified=modified)
+
+
+def intt_op(x, ipsi_rev, ipsi_rev_shoup, n_inv, n_inv_shoup, primes, *,
+            modified: bool = False):
+    """Inverse negacyclic NTT: bit-reversed eval -> (np, N) residues."""
+    return intt_pallas(x, ipsi_rev, ipsi_rev_shoup, n_inv, n_inv_shoup,
+                       primes, modified=modified)

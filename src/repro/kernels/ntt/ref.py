@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Pallas NTT/iNTT kernels.
+
+Delegates to the (independently python-int-validated) core transforms.
+"""
+
+from __future__ import annotations
+
+from repro.core.ntt import intt as _intt
+from repro.core.ntt import ntt as _ntt
+
+__all__ = ["ntt_ref", "intt_ref"]
+
+
+def ntt_ref(x, psi_rev, psi_rev_shoup, primes, *, modified: bool = False):
+    return _ntt(x, psi_rev, psi_rev_shoup, primes, modified=modified)
+
+
+def intt_ref(x, ipsi_rev, ipsi_rev_shoup, n_inv, n_inv_shoup, primes, *,
+             modified: bool = False):
+    return _intt(x, ipsi_rev, ipsi_rev_shoup, n_inv, n_inv_shoup, primes,
+                 modified=modified)

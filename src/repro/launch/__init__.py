@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, training/serving drivers, multi-pod dry-run."""

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+XLA_LHS_FLAGS = (
+    # collective/compute overlap knobs for real-TPU runs (documented here,
+    # consumed by launch scripts; harmless on CPU):
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_enable_async_collective_fusion=true "
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16×16 chips per pod; 2 pods multi-pod (assignment contract)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1) -> jax.sharding.Mesh:
+    """Whatever this host offers (tests / examples on CPU)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,76 @@
+"""Serving driver: batched prefill + greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --preset smoke --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.config import ModelConfig
+
+
+def generate(params, cfg: ModelConfig, tokens, gen_steps: int,
+             max_len: int, batch_extra=None):
+    """Greedy generation. tokens: (B, L) prompt. Returns (B, gen_steps)."""
+    B, L = tokens.shape
+    batch = {"tokens": tokens, **(batch_extra or {})}
+    logits, cache = prefill(params, batch, cfg, max_len)
+    step_fn = jax.jit(
+        lambda p, c, t, i: decode_step(p, c, t, i, cfg),
+        static_argnames=())
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(gen_steps):
+        out.append(tok)
+        logits, cache = step_fn(params, cache, tok, L + i)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_arch
+    cfg = get_arch(args.arch)
+    if args.preset == "smoke":
+        cfg = cfg.reduced()
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.key(0))
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+        jnp.int32)
+    extra = {}
+    if cfg.enc_dec:
+        extra["frames"] = jnp.asarray(rng.normal(
+            size=(args.batch, 2 * args.prompt_len, cfg.d_model)),
+            jnp.float32)
+    if cfg.frontend == "vision":
+        extra["patch_embeds"] = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    t0 = time.time()
+    out = generate(params, cfg, tokens,
+                   args.gen, args.prompt_len + args.gen + 8,
+                   batch_extra=extra)
+    dt = time.time() - t0
+    tps = args.batch * args.gen / dt
+    print(f"arch={args.arch} generated {out.shape} in {dt:.2f}s "
+          f"({tps:.1f} tok/s, incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""LM model substrate: every assigned architecture family in functional JAX.
+
+Families: dense decoder (GQA/SWA/RoPE/SwiGLU), MoE (top-k, optional dense
+residual), SSM (Mamba-1), hybrid (RG-LRU + local attention), encoder-decoder
+(whisper, stub audio frontend), VLM (stub patch frontend + decoder backbone).
+
+Params are nested dicts of jnp arrays; sharding rules live in repro.dist.
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    init_params, forward_train, loss_fn, prefill, decode_step, init_cache,
+)
+
+__all__ = [
+    "ModelConfig", "init_params", "forward_train", "loss_fn",
+    "prefill", "decode_step", "init_cache",
+]

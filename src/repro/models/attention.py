@@ -1,0 +1,194 @@
+"""GQA attention: flash-style chunked training path + cached decode path.
+
+- Training/prefill: blockwise softmax (running max / normalizer) scanned
+  over KV blocks — O(L·Kb) live memory instead of O(L²). Causal, sliding-
+  window (SWA / local), and bidirectional (encoder, cross) masks.
+- Decode: one query position against a (possibly ring-buffered) KV cache.
+
+Shapes: q (B, L, H, hd); k/v (B, S, Hkv, hd); GQA groups H into Hkv bands.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rope
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg, d_model=None, cross=False):
+    from repro.models.layers import init_linear
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, cfg.pdt,
+                          bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, cfg.pdt,
+                          bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, cfg.pdt,
+                          bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, cfg.pdt,
+                          scale=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _block_mask(q_pos, k_pos, causal, window):
+    """(Qb, Kb) additive mask."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window and window > 0:
+        m = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+    return m
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    block_q=512, block_k=512):
+    """Blockwise-softmax attention.
+
+    q: (B, Lq, H, hd); k, v: (B, Lk, Hkv, hd). Returns (B, Lq, H, hd).
+    """
+    B, Lq, H, hd = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bq = min(block_q, Lq)
+    while Lq % bq:
+        bq -= 1
+    bk = min(block_k, Lk)
+    while Lk % bk:
+        bk -= 1
+    nq, nk = Lq // bq, Lk // bk
+
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, nq, bq, Hkv, g, hd)
+    kf = k.astype(jnp.float32).reshape(B, nk, bk, Hkv, hd)
+    vf = v.astype(jnp.float32).reshape(B, nk, bk, Hkv, hd)
+
+    def per_qblock(qi, qblk):
+        # qblk: (B, bq, Hkv, g, hd)
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kf, ki, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vf, ki, 1, keepdims=False)
+            k_pos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)
+            s = s + _block_mask(q_pos, k_pos, causal, window)[None, None,
+                                                             None, :, :]
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, bq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out                                     # (B, Hkv, g, bq, hd)
+
+    outs = jax.lax.map(lambda args: per_qblock(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qf, 1, 0)))
+    # outs: (nq, B, Hkv, g, bq, hd) -> (B, Lq, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 2, 3, 1, 4, 5)
+    return out.reshape(B, Hkv * g, nq * bq, hd).transpose(0, 2, 1, 3) \
+        .astype(q.dtype)
+
+
+def attention_block(p, x, cfg, *, positions=None, causal=True, window=0,
+                    kv_x=None, use_rope=True, return_kv=False):
+    """Full attention sub-layer (projections + flash core).
+
+    kv_x: encoder memory for cross-attention (bidirectional, no rope).
+    return_kv: also return the (rotated) k/v for prefill cache building.
+    """
+    B, L, _ = x.shape
+    hd = cfg.hd
+    src = kv_x if kv_x is not None else x
+    q = _split_heads(dense(p["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(p["wk"], src), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], src), cfg.n_kv_heads, hd)
+    if positions is None:
+        positions = jnp.arange(L)[None, :]
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=causal and kv_x is None,
+                        window=window)
+    out = dense(p["wo"], o.reshape(B, L, cfg.n_heads * hd))
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def kv_to_ring_cache(k, v, S: int):
+    """Pack the last S positions of prefill k/v into the decode ring layout.
+
+    decode_attention writes position t at slot t % S; after prefilling L
+    tokens, position L-S+i must sit at slot (L-S+i) % S — a roll by L % S.
+    """
+    L = k.shape[1]
+    if L <= S:
+        pad = [(0, 0), (0, S - L), (0, 0), (0, 0)]
+        return jnp.pad(k, pad), jnp.pad(v, pad)
+    kw, vw = k[:, L - S:], v[:, L - S:]
+    return (jnp.roll(kw, L % S, axis=1), jnp.roll(vw, L % S, axis=1))
+
+
+# ---- decode path -----------------------------------------------------------
+
+def decode_attention(p, x_t, cache_k, cache_v, t, cfg, *, window=0,
+                     use_rope=True):
+    """One-token attention against the KV cache.
+
+    x_t: (B, 1, D); cache_k/v: (B, S, Hkv, hd) (S = max context or window,
+    ring-buffered when windowed); t: current absolute position (scalar).
+    Returns (out (B, 1, D), new_cache_k, new_cache_v).
+    """
+    B = x_t.shape[0]
+    hd = cfg.hd
+    S = cache_k.shape[1]
+    q = _split_heads(dense(p["wq"], x_t), cfg.n_heads, hd)
+    k = _split_heads(dense(p["wk"], x_t), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x_t), cfg.n_kv_heads, hd)
+    pos = jnp.full((B, 1), t)
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    slot = t % S if window else jnp.minimum(t, S - 1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+
+    Hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(B, Hkv, g, hd)
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    # valid slots: absolute position of slot i is i (linear cache) or within
+    # the last `window` writes (ring cache)
+    idx = jnp.arange(S)
+    if window:
+        age = (t % S - idx) % S            # steps since written
+        valid = (age < jnp.minimum(t + 1, S))
+    else:
+        valid = idx <= t
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, vf).astype(x_t.dtype)
+    o = o.reshape(B, 1, cfg.n_heads * hd)
+    return dense(p["wo"], o), cache_k, cache_v

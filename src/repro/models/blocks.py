@@ -1,0 +1,163 @@
+"""Per-layer blocks (attn / ssm / rglru, dense or MoE FFN) + stacking."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention_block, decode_attention, init_attn,
+)
+from repro.models.layers import init_norm, norm_apply
+from repro.models.mlp import gelu_mlp, init_gelu_mlp, init_swiglu, swiglu
+from repro.models.moe import init_moe, moe_block
+from repro.models.rglru import (
+    init_rglru, init_rglru_state, rglru_block, rglru_decode_step,
+)
+from repro.models.ssm import (
+    init_ssm, init_ssm_state, ssm_block, ssm_decode_step,
+)
+
+__all__ = ["init_layer", "apply_layer", "apply_layer_decode",
+           "apply_layer_prefill", "init_layer_cache"]
+
+
+def _ffn_init(key, cfg):
+    if cfg.n_experts:
+        return {"moe": init_moe(key, cfg)}
+    return {"mlp": init_swiglu(key, cfg.d_model, cfg.d_ff, cfg.pdt)}
+
+
+def _ffn_apply(p, x, cfg):
+    if "moe" in p:
+        return moe_block(p["moe"], x, cfg)
+    return swiglu(p["mlp"], x), jnp.zeros((), jnp.float32)
+
+
+def init_layer(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    nk = cfg.norm
+    if kind == "attn":
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.pdt, nk),
+            "attn": init_attn(ks[0], cfg),
+            "ln2": init_norm(cfg.d_model, cfg.pdt, nk),
+            **_ffn_init(ks[1], cfg),
+        }
+    if kind == "swa":
+        return init_layer(key, cfg, "attn")
+    if kind == "ssm":
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.pdt, nk),
+            "ssm": init_ssm(ks[0], cfg),
+        }
+    if kind == "rglru":
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.pdt, nk),
+            "rglru": init_rglru(ks[0], cfg),
+            "ln2": init_norm(cfg.d_model, cfg.pdt, nk),
+            **_ffn_init(ks[1], cfg),
+        }
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def _window_for(kind: str, cfg) -> int:
+    if kind == "swa" or (kind == "attn" and cfg.attention == "swa"):
+        return cfg.window
+    if kind == "attn" and cfg.layer_pattern:
+        return cfg.window          # hybrid archs use local attention
+    return 0
+
+
+def apply_layer(p, x, cfg, kind: str, positions=None):
+    """Training/prefill path. Returns (x, aux_loss, kv) — kv for prefill."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if kind in ("attn", "swa"):
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        att = attention_block(p["attn"], h, cfg, positions=positions,
+                              causal=True, window=_window_for(kind, cfg))
+        x = x + att
+        h2 = norm_apply(cfg.norm, p["ln2"], x)
+        f, aux = _ffn_apply(p, h2, cfg)
+        x = x + f
+    elif kind == "ssm":
+        x = x + ssm_block(p["ssm"], norm_apply(cfg.norm, p["ln1"], x), cfg)
+    elif kind == "rglru":
+        x = x + rglru_block(p["rglru"],
+                            norm_apply(cfg.norm, p["ln1"], x), cfg)
+        h2 = norm_apply(cfg.norm, p["ln2"], x)
+        f, aux = _ffn_apply(p, h2, cfg)
+        x = x + f
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def apply_layer_prefill(p, x, cfg, kind: str, max_len: int, positions=None):
+    """Prefill path: like apply_layer but also builds this layer's cache."""
+    from repro.models.attention import kv_to_ring_cache
+    if kind in ("attn", "swa"):
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        w = _window_for(kind, cfg)
+        att, k, v = attention_block(
+            p["attn"], h, cfg, positions=positions, causal=True,
+            window=w, return_kv=True)
+        S = min(max_len, w) if w else max_len
+        ck, cv = kv_to_ring_cache(k, v, S)
+        x = x + att
+        h2 = norm_apply(cfg.norm, p["ln2"], x)
+        f, _ = _ffn_apply(p, h2, cfg)
+        return x + f, {"k": ck, "v": cv}
+    if kind == "ssm":
+        from repro.models.ssm import _ssm_inner
+        out, tail, hs = _ssm_inner(
+            p["ssm"], norm_apply(cfg.norm, p["ln1"], x), cfg)
+        return x + out, {"h": hs, "conv_tail": tail}
+    if kind == "rglru":
+        from repro.models.rglru import _rglru_inner
+        out, tail, hs = _rglru_inner(
+            p["rglru"], norm_apply(cfg.norm, p["ln1"], x), cfg)
+        x = x + out
+        h2 = norm_apply(cfg.norm, p["ln2"], x)
+        f, _ = _ffn_apply(p, h2, cfg)
+        return x + f, {"hr": hs, "conv_tail": tail}
+    raise ValueError(kind)
+
+
+def init_layer_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "swa"):
+        w = _window_for(kind, cfg)
+        S = min(max_len, w) if w else max_len
+        shp = (batch, S, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if kind == "ssm":
+        return init_ssm_state(cfg, batch, dtype)
+    if kind == "rglru":
+        return init_rglru_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def apply_layer_decode(p, x_t, cache, t, cfg, kind: str):
+    """Single-token decode. Returns (x_t, new_cache)."""
+    if kind in ("attn", "swa"):
+        h = norm_apply(cfg.norm, p["ln1"], x_t)
+        w = _window_for(kind, cfg)
+        att, ck, cv = decode_attention(p["attn"], h, cache["k"], cache["v"],
+                                       t, cfg, window=w)
+        x_t = x_t + att
+        h2 = norm_apply(cfg.norm, p["ln2"], x_t)
+        f, _ = _ffn_apply(p, h2, cfg)
+        return x_t + f, {"k": ck, "v": cv}
+    if kind == "ssm":
+        out, st = ssm_decode_step(
+            p["ssm"], norm_apply(cfg.norm, p["ln1"], x_t), cache, cfg)
+        return x_t + out, st
+    if kind == "rglru":
+        out, st = rglru_decode_step(
+            p["rglru"], norm_apply(cfg.norm, p["ln1"], x_t), cache, cfg)
+        x_t = x_t + out
+        h2 = norm_apply(cfg.norm, p["ln2"], x_t)
+        f, _ = _ffn_apply(p, h2, cfg)
+        return x_t + f, st
+    raise ValueError(kind)

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_linear
+
+__all__ = ["init_swiglu", "swiglu", "init_gelu_mlp", "gelu_mlp"]
+
+
+def init_swiglu(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": init_linear(ks[0], d_model, d_ff, dtype),
+        "wg": init_linear(ks[1], d_model, d_ff, dtype),
+        "wo": init_linear(ks[2], d_ff, d_model, dtype,
+                          scale=d_ff ** -0.5),
+    }
+
+
+def swiglu(p, x):
+    h = jax.nn.silu(dense(p["wg"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], h * dense(p["wi"], x))
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": init_linear(ks[0], d_model, d_ff, dtype, bias=True),
+        "wo": init_linear(ks[1], d_ff, d_model, dtype, bias=True,
+                          scale=d_ff ** -0.5),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(dense(p["wi"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], h)

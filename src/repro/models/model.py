@@ -1,0 +1,429 @@
+"""Model top level: init / train forward / prefill / decode for all families.
+
+Decoder-only (dense, MoE, SSM, hybrid, VLM-backbone) and encoder-decoder
+(whisper) assemblies. Uniform layer stacks run under lax.scan with stacked
+params (compile-time sanity at 64 layers); hybrid patterns scan over whole
+pattern groups with an unrolled tail.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_block, decode_attention, \
+    init_attn, kv_to_ring_cache
+from repro.models.blocks import (
+    apply_layer, apply_layer_decode, apply_layer_prefill, init_layer,
+    init_layer_cache,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense, init_linear, init_norm, norm_apply, sinusoidal_positions,
+)
+from repro.models.mlp import gelu_mlp, init_gelu_mlp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "tok_embed": (jax.random.normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+        ).astype(cfg.pdt),
+        "ln_f": init_norm(cfg.d_model, cfg.pdt, cfg.norm),
+        "lm_head": init_linear(ks[1], cfg.d_model, cfg.vocab_size, cfg.pdt),
+    }
+    kinds = cfg.layer_kinds
+    if cfg.enc_dec:
+        p["enc"] = _init_encoder(ks[2], cfg)
+        p["dec"] = _init_dec_layers(ks[3], cfg)
+        return p
+    if cfg.uniform_layers and cfg.scan_layers:
+        keys = jax.random.split(ks[2], cfg.n_layers)
+        p["layers"] = jax.vmap(
+            lambda k: init_layer(k, cfg, kinds[0]))(keys)
+    elif cfg.layer_pattern and cfg.scan_layers:
+        g = len(cfg.layer_pattern)
+        n_groups, tail = divmod(cfg.n_layers, g)
+        gkeys = jax.random.split(ks[2], n_groups)
+
+        def init_group(k):
+            lk = jax.random.split(k, g)
+            return {f"sub{i}": init_layer(lk[i], cfg, cfg.layer_pattern[i])
+                    for i in range(g)}
+
+        p["groups"] = jax.vmap(init_group)(gkeys)
+        tkeys = jax.random.split(ks[3], max(tail, 1))
+        p["tail"] = [init_layer(tkeys[i], cfg, kinds[n_groups * g + i])
+                     for i in range(tail)]
+    else:
+        lkeys = jax.random.split(ks[2], cfg.n_layers)
+        p["layers_list"] = [init_layer(lkeys[i], cfg, kinds[i])
+                            for i in range(cfg.n_layers)]
+    return p
+
+
+def _init_encoder(key, cfg):
+    ks = jax.random.split(key, cfg.n_enc_layers + 1)
+
+    def enc_layer(k):
+        kk = jax.random.split(k, 2)
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.pdt, cfg.norm),
+            "attn": init_attn(kk[0], cfg),
+            "ln2": init_norm(cfg.d_model, cfg.pdt, cfg.norm),
+            "mlp": init_gelu_mlp(kk[1], cfg.d_model, cfg.d_ff, cfg.pdt),
+        }
+
+    return {
+        "layers": [enc_layer(ks[i]) for i in range(cfg.n_enc_layers)],
+        "ln_post": init_norm(cfg.d_model, cfg.pdt, cfg.norm),
+    }
+
+
+def _init_dec_layers(key, cfg):
+    ks = jax.random.split(key, cfg.n_layers)
+
+    def dec_layer(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.pdt, cfg.norm),
+            "self_attn": init_attn(kk[0], cfg),
+            "ln_x": init_norm(cfg.d_model, cfg.pdt, cfg.norm),
+            "cross_attn": init_attn(kk[1], cfg, cross=True),
+            "ln2": init_norm(cfg.d_model, cfg.pdt, cfg.norm),
+            "mlp": init_gelu_mlp(kk[2], cfg.d_model, cfg.d_ff, cfg.pdt),
+        }
+
+    return {"layers": [dec_layer(ks[i]) for i in range(cfg.n_layers)]}
+
+
+# --------------------------------------------------------------------------
+# stacks (train/prefill)
+# --------------------------------------------------------------------------
+
+def _remat_wrap(fn, cfg):
+    """Apply the configured remat policy (§Perf lever)."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(p, x, cfg, positions=None):
+    """Returns (x, total_aux)."""
+    kinds = cfg.layer_kinds
+    aux_total = jnp.zeros((), jnp.float32)
+    if "layers" in p:
+        def body(x, layer_p):
+            fn = _remat_wrap(
+                functools.partial(apply_layer, cfg=cfg, kind=kinds[0],
+                                  positions=positions), cfg)
+            x, aux = fn(layer_p, x)
+            return x, aux
+        x, auxes = jax.lax.scan(body, x, p["layers"])
+        return x, aux_total + auxes.sum()
+    if "groups" in p:
+        g = len(cfg.layer_pattern)
+
+        def gbody(x, group_p):
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(g):
+                fn = _remat_wrap(
+                    functools.partial(apply_layer, cfg=cfg,
+                                      kind=cfg.layer_pattern[i],
+                                      positions=positions), cfg)
+                x, a = fn(group_p[f"sub{i}"], x)
+                aux = aux + a
+            return x, aux
+        x, auxes = jax.lax.scan(gbody, x, p["groups"])
+        aux_total = aux_total + auxes.sum()
+        n_groups = cfg.n_layers // g
+        for i, lp in enumerate(p["tail"]):
+            x, a = apply_layer(lp, x, cfg, kinds[n_groups * g + i],
+                               positions=positions)
+            aux_total = aux_total + a
+        return x, aux_total
+    for i, lp in enumerate(p["layers_list"]):
+        fn = _remat_wrap(
+            functools.partial(apply_layer, cfg=cfg, kind=kinds[i],
+                              positions=positions), cfg)
+        x, a = fn(lp, x)
+        aux_total = aux_total + a
+    return x, aux_total
+
+
+def _encode_frames(p, frames, cfg):
+    """Whisper encoder over stub frame embeddings (B, S, D)."""
+    x = frames.astype(cfg.adt)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, cfg.adt)[None]
+    for lp in p["enc"]["layers"]:
+        h = norm_apply(cfg.norm, lp["ln1"], x)
+        x = x + attention_block(lp["attn"], h, cfg, causal=False,
+                                use_rope=False)
+        h2 = norm_apply(cfg.norm, lp["ln2"], x)
+        x = x + gelu_mlp(lp["mlp"], h2)
+    return norm_apply(cfg.norm, p["enc"]["ln_post"], x)
+
+
+def _decoder_stack_encdec(p, x, memory, cfg):
+    for lp in p["dec"]["layers"]:
+        h = norm_apply(cfg.norm, lp["ln1"], x)
+        x = x + attention_block(lp["self_attn"], h, cfg, causal=True,
+                                use_rope=False)
+        hx = norm_apply(cfg.norm, lp["ln_x"], x)
+        x = x + attention_block(lp["cross_attn"], hx, cfg, kv_x=memory,
+                                use_rope=False)
+        h2 = norm_apply(cfg.norm, lp["ln2"], x)
+        x = x + gelu_mlp(lp["mlp"], h2)
+    return x
+
+
+# --------------------------------------------------------------------------
+# train forward / loss
+# --------------------------------------------------------------------------
+
+def forward_train(params: Params, batch: Dict[str, jnp.ndarray],
+                  cfg: ModelConfig):
+    """Returns (logits (B, L, V), aux_loss)."""
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    x = params["tok_embed"].astype(cfg.adt)[tokens]
+
+    if cfg.enc_dec:
+        memory = _encode_frames(params, batch["frames"], cfg)
+        x = x + sinusoidal_positions(L, cfg.d_model, cfg.adt)[None]
+        x = _decoder_stack_encdec(params, x, memory, cfg)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        positions = jnp.arange(L)[None, :]
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(cfg.adt)
+            x = jnp.concatenate([pe, x], axis=1)
+            positions = jnp.arange(x.shape[1])[None, :]
+        x, aux = _run_stack(params, x, cfg, positions=positions)
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            x = x[:, -L:]
+    x = norm_apply(cfg.norm, params["ln_f"], x)
+    logits = dense(params["lm_head"], x).astype(jnp.float32)
+    return logits, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    logits, aux = forward_train(params, batch, cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": mask.sum()}
+
+
+# --------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0):
+    dtype = cfg.adt
+    if cfg.enc_dec:
+        shp = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+        xshp = (batch, enc_len, cfg.n_kv_heads, cfg.hd)
+        return {
+            "dec": [{"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+                     "xk": jnp.zeros(xshp, dtype),
+                     "xv": jnp.zeros(xshp, dtype)}
+                    for _ in range(cfg.n_layers)],
+        }
+    kinds = cfg.layer_kinds
+    if cfg.uniform_layers and cfg.scan_layers:
+        one = init_layer_cache(cfg, kinds[0], batch, max_len, dtype)
+        return {"stacked": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+            one)}
+    if cfg.layer_pattern and cfg.scan_layers:
+        g = len(cfg.layer_pattern)
+        n_groups, tail = divmod(cfg.n_layers, g)
+        group = {f"sub{i}": init_layer_cache(cfg, cfg.layer_pattern[i],
+                                             batch, max_len, dtype)
+                 for i in range(g)}
+        return {
+            "groups": jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (n_groups,) + a.shape), group),
+            "tail": [init_layer_cache(cfg, kinds[n_groups * g + i], batch,
+                                      max_len, dtype)
+                     for i in range(tail)],
+        }
+    return {"list": [init_layer_cache(cfg, kinds[i], batch, max_len, dtype)
+                     for i in range(cfg.n_layers)]}
+
+
+def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            max_len: int):
+    """Run the prompt, build the cache. Returns (last-token logits, cache)."""
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    x = params["tok_embed"].astype(cfg.adt)[tokens]
+    kinds = cfg.layer_kinds
+
+    if cfg.enc_dec:
+        memory = _encode_frames(params, batch["frames"], cfg)
+        x = x + sinusoidal_positions(L, cfg.d_model, cfg.adt)[None]
+        caches = []
+        for lp in params["dec"]["layers"]:
+            h = norm_apply(cfg.norm, lp["ln1"], x)
+            att, k, v = attention_block(lp["self_attn"], h, cfg, causal=True,
+                                        use_rope=False, return_kv=True)
+            ck, cv = kv_to_ring_cache(k, v, max_len)
+            x = x + att
+            hx = norm_apply(cfg.norm, lp["ln_x"], x)
+            xatt, xk, xv = attention_block(lp["cross_attn"], hx, cfg,
+                                           kv_x=memory, use_rope=False,
+                                           return_kv=True)
+            x = x + xatt
+            h2 = norm_apply(cfg.norm, lp["ln2"], x)
+            x = x + gelu_mlp(lp["mlp"], h2)
+            caches.append({"k": ck, "v": cv, "xk": xk, "xv": xv})
+        x = norm_apply(cfg.norm, params["ln_f"], x)
+        logits = dense(params["lm_head"], x[:, -1:]).astype(jnp.float32)
+        return logits, {"dec": caches}
+
+    positions = jnp.arange(L)[None, :]
+    if "layers" in params:
+        def body(x, layer_p):
+            x, cache = apply_layer_prefill(layer_p, x, cfg, kinds[0],
+                                           max_len, positions=positions)
+            return x, cache
+        x, stacked = jax.lax.scan(body, x, params["layers"])
+        cache = {"stacked": stacked}
+    elif "groups" in params:
+        g = len(cfg.layer_pattern)
+        n_groups = cfg.n_layers // g
+
+        def gbody(x, group_p):
+            caches = {}
+            for i in range(g):
+                x, c = apply_layer_prefill(group_p[f"sub{i}"], x, cfg,
+                                           cfg.layer_pattern[i], max_len,
+                                           positions=positions)
+                caches[f"sub{i}"] = c
+            return x, caches
+        x, gcaches = jax.lax.scan(gbody, x, params["groups"])
+        tails = []
+        for i, lp in enumerate(params["tail"]):
+            x, c = apply_layer_prefill(lp, x, cfg, kinds[n_groups * g + i],
+                                       max_len, positions=positions)
+            tails.append(c)
+        cache = {"groups": gcaches, "tail": tails}
+    else:
+        caches = []
+        for i, lp in enumerate(params["layers_list"]):
+            x, c = apply_layer_prefill(lp, x, cfg, kinds[i], max_len,
+                                       positions=positions)
+            caches.append(c)
+        cache = {"list": caches}
+    x = norm_apply(cfg.norm, params["ln_f"], x)
+    logits = dense(params["lm_head"], x[:, -1:]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params: Params, cache, token_t: jnp.ndarray, t,
+                cfg: ModelConfig):
+    """One decode step. token_t: (B, 1) int32; t: current position (scalar).
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = params["tok_embed"].astype(cfg.adt)[token_t]
+    kinds = cfg.layer_kinds
+
+    if cfg.enc_dec:
+        from repro.models.layers import sinusoidal_position_at
+        pos = sinusoidal_position_at(jnp.asarray(t), cfg.d_model,
+                                     cfg.adt)[None, None]
+        x = x + pos
+        new = []
+        for lp, c in zip(params["dec"]["layers"], cache["dec"]):
+            h = norm_apply(cfg.norm, lp["ln1"], x)
+            att, ck, cv = decode_attention(lp["self_attn"], h, c["k"],
+                                           c["v"], t, cfg, use_rope=False)
+            x = x + att
+            hx = norm_apply(cfg.norm, lp["ln_x"], x)
+            # cross attention: static memory, no causal mask
+            xout = _cross_decode(lp["cross_attn"], hx, c["xk"], c["xv"], cfg)
+            x = x + xout
+            h2 = norm_apply(cfg.norm, lp["ln2"], x)
+            x = x + gelu_mlp(lp["mlp"], h2)
+            new.append({"k": ck, "v": cv, "xk": c["xk"], "xv": c["xv"]})
+        x = norm_apply(cfg.norm, params["ln_f"], x)
+        return dense(params["lm_head"], x).astype(jnp.float32), {"dec": new}
+
+    if "layers" in params:
+        def body(x, scanned):
+            layer_p, c = scanned
+            x, c2 = apply_layer_decode(layer_p, x, c, t, cfg, kinds[0])
+            return x, c2
+        x, new_stacked = jax.lax.scan(body, x,
+                                      (params["layers"], cache["stacked"]))
+        new_cache = {"stacked": new_stacked}
+    elif "groups" in params:
+        g = len(cfg.layer_pattern)
+        n_groups = cfg.n_layers // g
+
+        def gbody(x, scanned):
+            group_p, gc = scanned
+            out_c = {}
+            for i in range(g):
+                x, c2 = apply_layer_decode(group_p[f"sub{i}"], x,
+                                           gc[f"sub{i}"], t, cfg,
+                                           cfg.layer_pattern[i])
+                out_c[f"sub{i}"] = c2
+            return x, out_c
+        x, new_g = jax.lax.scan(gbody, x,
+                                (params["groups"], cache["groups"]))
+        new_tail = []
+        for i, (lp, c) in enumerate(zip(params["tail"], cache["tail"])):
+            x, c2 = apply_layer_decode(lp, x, c, t, cfg,
+                                       kinds[n_groups * g + i])
+            new_tail.append(c2)
+        new_cache = {"groups": new_g, "tail": new_tail}
+    else:
+        new_list = []
+        for i, (lp, c) in enumerate(zip(params["layers_list"],
+                                        cache["list"])):
+            x, c2 = apply_layer_decode(lp, x, c, t, cfg, kinds[i])
+            new_list.append(c2)
+        new_cache = {"list": new_list}
+    x = norm_apply(cfg.norm, params["ln_f"], x)
+    return dense(params["lm_head"], x).astype(jnp.float32), new_cache
+
+
+def _cross_decode(p, x_t, xk, xv, cfg):
+    """Decode-time cross attention against static encoder memory."""
+    import jax.numpy as jnp
+    from repro.models.attention import _split_heads
+    B = x_t.shape[0]
+    hd = cfg.hd
+    q = _split_heads(dense(p["wq"], x_t), cfg.n_heads, hd)
+    Hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, xk.astype(jnp.float32))
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, xv.astype(jnp.float32))
+    o = o.astype(x_t.dtype).reshape(B, 1, cfg.n_heads * hd)
+    return dense(p["wo"], o)

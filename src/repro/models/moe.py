@@ -1,0 +1,89 @@
+"""Mixture-of-Experts: top-k routing with capacity-bounded sort dispatch.
+
+Expert-parallel friendly: expert weight tensors carry E as their leading
+axis (sharded over the `model` mesh axis); dispatch is sort-based (no
+(T, E, C) one-hot blowup): assignments are argsorted by expert, positions
+within each expert computed by searchsorted, tokens over capacity dropped.
+
+Aux load-balancing loss (Switch-style) is returned alongside.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear
+
+__all__ = ["init_moe", "moe_block"]
+
+
+def init_moe(key, cfg):
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    dt = cfg.pdt
+
+    def expert_stack(k, d_in, d_out, scale):
+        return jax.random.normal(k, (E, d_in, d_out), jnp.float32) \
+            .astype(dt) * scale
+
+    p = {
+        "router": init_linear(ks[0], D, E, jnp.float32),
+        "wi": expert_stack(ks[1], D, F, D ** -0.5),
+        "wg": expert_stack(ks[2], D, F, D ** -0.5),
+        "wo": expert_stack(ks[3], F, D, F ** -0.5),
+    }
+    if cfg.moe_dense_residual:
+        from repro.models.mlp import init_swiglu
+        p["dense"] = init_swiglu(ks[4], D, cfg.dense_d_ff or cfg.d_ff, dt)
+    return p
+
+
+def moe_block(p, x, cfg):
+    """x: (B, L, D) -> (y (B, L, D), aux_loss scalar)."""
+    B, L, D = x.shape
+    T = B * L
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                           # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E · Σ_e f_e · P_e
+    f = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    P = probs.mean(0)
+    aux = E * jnp.sum(f * P)
+
+    C = max(1, int(cfg.capacity_factor * T * k / E))
+
+    flat_e = idx.reshape(-1)                                      # (T·k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within expert segment
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(T * k) - first
+    keep = pos < C
+    tok = order // k                                              # token id
+    slot_e = jnp.where(keep, sorted_e, E - 1)
+    slot_c = jnp.where(keep, pos, C)                              # overflow->C
+
+    buf = jnp.zeros((E, C + 1, D), x.dtype)
+    buf = buf.at[slot_e, slot_c].set(xt[tok] * keep[:, None].astype(x.dtype))
+    buf = buf[:, :C]                                              # (E, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+
+    # combine back: each kept assignment gathers its expert output × gate
+    y_assign = y_buf[slot_e, jnp.minimum(slot_c, C - 1)]          # (T·k, D)
+    w_assign = (gate.reshape(-1)[order] * keep).astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(y_assign * w_assign[:, None])
+
+    if "dense" in p:
+        from repro.models.mlp import swiglu
+        y = y + swiglu(p["dense"], xt)
+    return y.reshape(B, L, D), aux

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [linear branch with GELU gate] ∥ [linear -> causal conv1d ->
+RG-LRU] -> multiply -> out linear.
+
+RG-LRU (diagonal gated linear recurrence):
+    r_t = σ(W_a x_t + b_a)                  (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                  (input gate)
+    a_t = a^(c·r_t)  with  a = σ(Λ), c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Scan structure mirrors ssm.py (chunked + remat). Decode carries (h, conv
+tail).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_linear
+from repro.models.ssm import _conv1d_causal
+
+__all__ = ["init_rglru", "rglru_block", "rglru_decode_step",
+           "init_rglru_state"]
+
+C_CONST = 8.0
+CHUNK = 128
+
+
+def init_rglru(key, cfg):
+    D, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdt
+    # Λ init so a = σ(Λ) ∈ (0.9, 0.999) (paper's stable range)
+    u = jax.random.uniform(ks[4], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / C_CONST) / (1 - u ** (1.0 / C_CONST)))
+    return {
+        "in_x": init_linear(ks[0], D, W, dt),
+        "in_y": init_linear(ks[1], D, W, dt),
+        "conv_w": (jax.random.normal(ks[2], (4, W), jnp.float32)
+                   * (4 * W) ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((W,), dt),
+        "gate_a": init_linear(ks[3], W, W, jnp.float32, bias=True),
+        "gate_x": init_linear(ks[5], W, W, jnp.float32, bias=True),
+        "lambda": lam,
+        "out": init_linear(jax.random.fold_in(key, 9), W, D, dt,
+                           scale=W ** -0.5),
+    }
+
+
+def _rglru_scan(p, xs, h0):
+    """xs: (B, L, W) f32. Returns (y (B, L, W) f32, h_final)."""
+    B, L, W = xs.shape
+    r = jax.nn.sigmoid(xs @ p["gate_a"]["w"] + p["gate_a"]["b"])
+    i = jax.nn.sigmoid(xs @ p["gate_x"]["w"] + p["gate_x"]["b"])
+    log_a = -C_CONST * jax.nn.softplus(p["lambda"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xs)
+
+    n_chunks = max(1, L // CHUNK)
+    while L % n_chunks:
+        n_chunks -= 1
+    ch = L // n_chunks
+
+    def tm(x):
+        return jnp.moveaxis(x, 1, 0).reshape(n_chunks, ch, B, W)
+
+    def chunk_step(h, inp):
+        ac, gc = inp
+
+        def step(h, t_in):
+            at, gt = t_in
+            h = at * h + gt
+            return h, h
+
+        return jax.lax.scan(step, h, (ac, gc))
+
+    h, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, (tm(a), tm(gated)))
+    return jnp.moveaxis(ys.reshape(L, B, W), 0, 1), h
+
+
+def _rglru_inner(p, x, cfg, conv_tail=None, h0=None):
+    B, L, _ = x.shape
+    W = cfg.lru_width
+    y_branch = jax.nn.gelu(dense(p["in_y"], x).astype(jnp.float32))
+    xs = dense(p["in_x"], x)
+    xs, new_tail = _conv1d_causal(p["conv_w"], p["conv_b"], xs, conv_tail)
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    h_seq, h = _rglru_scan(p, xs.astype(jnp.float32), h0)
+    out = (h_seq * y_branch).astype(x.dtype)
+    return dense(p["out"], out), new_tail, h
+
+
+def rglru_block(p, x, cfg):
+    out, _, _ = _rglru_inner(p, x, cfg)
+    return out
+
+
+def init_rglru_state(cfg, batch, dtype):
+    return {
+        "hr": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv_tail": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode_step(p, x_t, state, cfg):
+    out, tail, h = _rglru_inner(p, x_t, cfg, conv_tail=state["conv_tail"],
+                                h0=state["hr"])
+    return out, {"hr": h, "conv_tail": tail}

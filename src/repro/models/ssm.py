@@ -1,0 +1,129 @@
+"""Mamba-1 selective state-space block (falcon-mamba architecture).
+
+x -> in_proj -> [x, z]; x -> causal depthwise conv1d -> SiLU ->
+selective scan (input-dependent Δ, B, C; diagonal A) -> ·SiLU(z) -> out_proj.
+
+The scan runs as an outer lax.scan over fixed-size chunks (each chunk
+rematerialized) with an inner sequential scan carrying (B, d_inner, d_state)
+— memory stays O(B·d_inner·d_state·n_chunks) during training. Decode carries
+the recurrent state and a (conv-1)-deep input tail.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_linear
+
+__all__ = ["init_ssm", "ssm_block", "ssm_decode_step", "init_ssm_state"]
+
+CHUNK = 128
+
+
+def init_ssm(key, cfg):
+    D, DI, R, S = cfg.d_model, cfg.d_inner, cfg.dt_rank, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdt
+    A = jnp.tile(jnp.arange(1, S + 1, dtype=jnp.float32)[None, :], (DI, 1))
+    return {
+        "in_proj": init_linear(ks[0], D, 2 * DI, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, DI), jnp.float32)
+                   * (cfg.ssm_conv * DI) ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((DI,), dt),
+        "x_proj": init_linear(ks[2], DI, R + 2 * S, dt),
+        "dt_proj": init_linear(ks[3], R, DI, dt, bias=True),
+        "A_log": jnp.log(A),                       # f32 (stability)
+        "D": jnp.ones((DI,), jnp.float32),
+        "out_proj": init_linear(ks[4], DI, D, dt, scale=DI ** -0.5),
+    }
+
+
+def _conv1d_causal(w, b, x, tail=None):
+    """Depthwise causal conv. x: (B, L, DI); w: (K, DI); tail: (B, K-1, DI)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+              for i in range(K))
+    return out + b.astype(x.dtype), xp[:, -(K - 1):]
+
+
+def _selective_scan(u, delta, Bc, Cc, A, D, h0, chunk=CHUNK, remat=True):
+    """u: (B, L, DI); delta: (B, L, DI); Bc/Cc: (B, L, S); A: (DI, S).
+
+    h_t = exp(Δ_t A)·h_{t-1} + Δ_t·B_t·u_t ;  y_t = C_t·h_t + D·u_t.
+    Returns (y (B, L, DI) f32, h_final (B, DI, S) f32).
+    """
+    L = u.shape[1]
+    n_chunks = max(1, L // chunk)
+    while L % n_chunks:
+        n_chunks -= 1
+
+    def chunk_step(h, inputs):
+        uc, dc, bc, cc = inputs          # (CH, B, ...) time-major
+
+        def step(h, t_in):
+            ut, dt_, bt, ct = t_in       # (B, DI), (B, DI), (B, S), (B, S)
+            dA = jnp.exp(dt_[..., None] * (-A)[None])       # (B, DI, S)
+            dBu = dt_[..., None] * bt[:, None, :] * ut[..., None]
+            h = dA * h + dBu
+            y = jnp.einsum("bds,bs->bd", h, ct)
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, (uc, dc, bc, cc))
+        return h, ys
+
+    def tm(x):  # (B, L, ...) -> (n_chunks, CH, B, ...)
+        ch = L // n_chunks
+        return jnp.moveaxis(x, 1, 0).reshape(n_chunks, ch, *x.shape[:1],
+                                             *x.shape[2:])
+
+    chunked = (tm(u), tm(delta), tm(Bc), tm(Cc))
+    step_fn = jax.checkpoint(chunk_step) if remat else chunk_step
+    h, ys = jax.lax.scan(step_fn, h0, chunked)
+    y = jnp.moveaxis(ys.reshape(L, u.shape[0], -1), 0, 1)
+    return y + u * D[None, None, :], h
+
+
+def _ssm_inner(p, x, cfg, conv_tail=None, h0=None):
+    B, L, _ = x.shape
+    DI, R, S = cfg.d_inner, cfg.dt_rank, cfg.ssm_state
+    xz = dense(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_tail = _conv1d_causal(p["conv_w"], p["conv_b"], xs, conv_tail)
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+    proj = dense(p["x_proj"], xs.astype(x.dtype)).astype(jnp.float32)
+    dt_in, Bc, Cc = jnp.split(proj, [R, R + S], axis=-1)
+    delta = jax.nn.softplus(
+        dt_in @ p["dt_proj"]["w"].astype(jnp.float32)
+        + p["dt_proj"]["b"].astype(jnp.float32))
+    A = jnp.exp(p["A_log"])
+    if h0 is None:
+        h0 = jnp.zeros((B, DI, S), jnp.float32)
+    y, h = _selective_scan(xs, delta, Bc, Cc, A, p["D"], h0,
+                           chunk=cfg.ssm_chunk,
+                           remat=cfg.remat_policy != "none")
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return dense(p["out_proj"], y), new_tail, h
+
+
+def ssm_block(p, x, cfg):
+    out, _, _ = _ssm_inner(p, x, cfg)
+    return out
+
+
+def init_ssm_state(cfg, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv_tail": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                               dtype),
+    }
+
+
+def ssm_decode_step(p, x_t, state, cfg):
+    """x_t: (B, 1, D). Returns (out (B, 1, D), new state)."""
+    out, tail, h = _ssm_inner(p, x_t, cfg, conv_tail=state["conv_tail"],
+                              h0=state["h"])
+    return out, {"h": h, "conv_tail": tail}

@@ -1,0 +1,8 @@
+"""Optimizer substrate: AdamW, clipping, schedules, gradient compression."""
+
+from repro.optim.adamw import adamw_init, adamw_update, OptState
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compress import compress_int8, decompress_int8
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "warmup_cosine",
+           "compress_int8", "decompress_int8"]

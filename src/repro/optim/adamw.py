@@ -1,0 +1,72 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Moments are kept in f32 regardless of param dtype (bf16 training safety);
+the update is computed in f32 and cast back. State is a plain pytree so the
+checkpoint and sharding layers treat it like params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, moments_dtype=jnp.float32) -> OptState:
+    """moments_dtype=bfloat16 halves optimizer HBM + checkpoint traffic
+    (§Perf lever; update math still runs in f32)."""
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, moments_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        tree, jnp.zeros((), jnp.float32)))
+
+
+def adamw_update(grads, state: OptState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + \
+            weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2.astype(mdt), v2.astype(mdt)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v), {
+        "grad_norm": gnorm, "clip_scale": scale}

@@ -1,0 +1,38 @@
+"""Gradient compression for the explicit-collective DP path.
+
+int8 block quantization with stochastic rounding: each 256-value block
+carries an f32 scale; all-reducing the int8 payload cuts DP gradient
+traffic 4× vs f32 (it composes with the shard_map training step in
+repro.dist.collectives — compress, psum, decompress).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def compress_int8(x: jnp.ndarray, key) -> tuple:
+    """f32 array -> (int8 payload (N/B, B), f32 scales (N/B,), orig shape)."""
+    flat, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = blocks / scale
+    noise = jax.random.uniform(key, q.shape, jnp.float32, -0.5, 0.5)
+    q8 = jnp.clip(jnp.round(q + noise), -127, 127).astype(jnp.int8)
+    return q8, scale[:, 0], (x.shape, n)
+
+
+def decompress_int8(q8, scale, meta) -> jnp.ndarray:
+    shape, n = meta
+    flat = (q8.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)

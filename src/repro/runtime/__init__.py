@@ -1,0 +1,6 @@
+"""Runtime: heartbeats, failure injection, straggler monitoring, restarts."""
+
+from repro.runtime.monitor import StepMonitor, Heartbeat
+from repro.runtime.failures import FailureInjector, SimulatedFailure
+
+__all__ = ["StepMonitor", "Heartbeat", "FailureInjector", "SimulatedFailure"]

@@ -1,0 +1,33 @@
+"""Deterministic failure injection for fault-tolerance tests.
+
+Simulates the two pod-scale failure classes the launcher must survive:
+  - hard failure (process dies mid-step → restart from latest checkpoint),
+  - straggler (a step takes k× longer → SLA breach surfaced by StepMonitor).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable, Set
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    def __init__(self, fail_at_steps: Iterable[int] = (),
+                 straggle_at_steps: Iterable[int] = (),
+                 straggle_seconds: float = 0.5):
+        self.fail_at: Set[int] = set(fail_at_steps)
+        self.straggle_at: Set[int] = set(straggle_at_steps)
+        self.straggle_seconds = straggle_seconds
+        self.fired: Set[int] = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+        if step in self.straggle_at and step not in self.fired:
+            self.fired.add(step)
+            time.sleep(self.straggle_seconds)

@@ -1,0 +1,74 @@
+"""Step-time SLA monitoring and heartbeats (straggler mitigation layer).
+
+At 1000+ nodes the failure you see most is not a crash but a slow pod:
+one host's step time degrades (thermals, ECC retries, a flaky ICI link)
+and the synchronous collective drags everyone. The monitor keeps an EMA of
+step wall-time and flags breaches of ``slack × EMA``; the launcher's policy
+(launch/train.py) is then: log → alert → checkpoint-and-exclude. On real
+fleets the exclusion triggers a re-slice onto hot spares; in this repo the
+re-slice is exercised by the elastic-restart test (different mesh on
+restore).
+
+Heartbeat files let an external supervisor detect a hung process (no write
+within `timeout`) and kill/restart it — the standard watchdog contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+
+class StepMonitor:
+    def __init__(self, ema_alpha: float = 0.1, slack: float = 2.0,
+                 warmup_steps: int = 3):
+        self.alpha = ema_alpha
+        self.slack = slack
+        self.warmup = warmup_steps
+        self.ema: Optional[float] = None
+        self.count = 0
+        self.breaches = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step breached the SLA (straggler signal)."""
+        self.count += 1
+        if self.count <= self.warmup:
+            # min over warmup: the first step carries compilation time and
+            # must not poison the baseline.
+            self.ema = seconds if self.ema is None else min(self.ema,
+                                                            seconds)
+            return False
+        breach = seconds > self.slack * self.ema
+        if breach:
+            self.breaches.append((step, seconds, self.ema))
+        else:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * seconds
+        return breach
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval: float = 10.0):
+        self.path = path
+        self.interval = interval
+        self._last = 0.0
+
+    def beat(self, step: int, payload: Optional[dict] = None) -> None:
+        now = time.time()
+        if now - self._last < self.interval:
+            return
+        self._last = now
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": now, **(payload or {})}, f)
+        os.replace(tmp, self.path)
+
+    @staticmethod
+    def is_alive(path: str, timeout: float) -> bool:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            return time.time() - data["time"] < timeout
+        except (OSError, ValueError, KeyError):
+            return False

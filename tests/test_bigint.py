@@ -1,0 +1,100 @@
+"""Limb-array BigInt arithmetic vs python-int oracles (incl. hypothesis)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core import bigint as B
+from repro.nt.residue import int_to_limbs, limbs_to_int
+
+L = 7  # limbs under test
+
+
+def _to(x, bits, limbs=L):
+    return jnp.asarray(int_to_limbs(x % (1 << (bits * limbs)), limbs, bits))
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+@given(a=st.integers(min_value=0), b=st.integers(min_value=0))
+@settings(max_examples=60, deadline=None)
+def test_add_sub_mod_2k(bits, a, b):
+    W_ = 1 << (bits * L)
+    a, b = a % W_, b % W_
+    s = B.add(_to(a, bits)[None], _to(b, bits)[None])[0]
+    d = B.sub(_to(a, bits)[None], _to(b, bits)[None])[0]
+    assert limbs_to_int(np.asarray(s), bits) == (a + b) % W_
+    assert limbs_to_int(np.asarray(d), bits) == (a - b) % W_
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+@given(a=st.integers(min_value=0), k=st.integers(min_value=0, max_value=L * 64))
+@settings(max_examples=60, deadline=None)
+def test_mask_bits(bits, a, k):
+    k = min(k, bits * L)
+    W_ = 1 << (bits * L)
+    a = a % W_
+    m = B.mask_bits(_to(a, bits)[None], k)[0]
+    assert limbs_to_int(np.asarray(m), bits) == a % (1 << k)
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+@given(a=st.integers(min_value=0), b=st.integers(min_value=0))
+@settings(max_examples=60, deadline=None)
+def test_compare_ge(bits, a, b):
+    W_ = 1 << (bits * L)
+    a, b = a % W_, b % W_
+    ge = B.compare_ge(_to(a, bits)[None], _to(b, bits)[None])[0]
+    assert bool(ge) == (a >= b)
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+@given(v=st.integers(min_value=-2**180, max_value=2**180),
+       s=st.integers(min_value=1, max_value=150))
+@settings(max_examples=80, deadline=None)
+def test_shift_right_round_signed(bits, v, s):
+    """round-half-up(v / 2^s) on two's complement matches python."""
+    W_ = 1 << (bits * L)
+    if abs(v) >= W_ // 4:
+        v %= (W_ // 4)
+    enc = v % W_
+    out = B.shift_right_round(_to(enc, bits)[None], s)[0]
+    got = limbs_to_int(np.asarray(out), bits)
+    # interpret as signed
+    if got >= W_ // 2:
+        got -= W_
+    expect = (v + (1 << (s - 1))) >> s   # floor((v+half)/2^s) = round-half-up
+    assert got == expect, (v, s, got, expect)
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+@given(a=st.integers(min_value=0), w=st.integers(min_value=0))
+@settings(max_examples=60, deadline=None)
+def test_mul_word(bits, a, w):
+    W_ = 1 << (bits * L)
+    a = a % W_
+    w = w % (1 << bits)
+    dt = jnp.uint32 if bits == 32 else jnp.uint64
+    out = B.mul_word(_to(a, bits)[None], jnp.asarray([w], dt))[0]
+    assert limbs_to_int(np.asarray(out), bits) == (a * w) % W_
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+def test_neg_and_sign(bits):
+    W_ = 1 << (bits * L)
+    for v in [0, 1, 12345, W_ // 2 - 1, W_ // 2, W_ - 1]:
+        n = B.neg(_to(v, bits)[None])[0]
+        assert limbs_to_int(np.asarray(n), bits) == (-v) % W_
+        assert bool(B.sign_bit(_to(v, bits)[None])[0]) == (v >= W_ // 2)
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+@given(a=st.integers(min_value=0), s=st.integers(min_value=0, max_value=200))
+@settings(max_examples=60, deadline=None)
+def test_shift_left(bits, a, s):
+    W_ = 1 << (bits * L)
+    a = a % W_
+    out = B.shift_left_bits(_to(a, bits)[None], s)[0]
+    assert limbs_to_int(np.asarray(out), bits) == (a << s) % W_

@@ -1,0 +1,71 @@
+"""Dry-run analysis plumbing: HLO collective parser + roofline math."""
+
+import repro.core  # noqa: F401
+from repro.launch.dryrun import collective_bytes_from_hlo
+from benchmarks.roofline import analyze_record, model_flops
+
+
+# modern HLO style: operands are SSA refs without inline shapes
+HLO = """
+  %all-reduce.5 = f32[512,1024]{1,0} all-reduce(%add.3), replica_groups={{0,1},{2,3}}
+  %ag = bf16[64,128]{1,0} all-gather(%p0), replica_groups=[8,16]<=[128], dimensions={0}
+  %rs.1 = f32[16]{0} reduce-scatter(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = u32[8,8]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %ar2 = f32[4]{0} all-reduce-start(%z), replica_groups={{0,1}}
+  %ar2d = f32[4]{0} all-reduce-done(%ar2)
+  %a2a = u32[2,2]{1,0} all-to-all(%v), replica_groups={{0,1,2,3}}
+  %not = f32[9]{0} add(%a, %b)
+"""
+
+
+def test_collective_parser_counts_and_ring_bytes():
+    r = collective_bytes_from_hlo(HLO)
+    assert r["counts"] == {"all-reduce": 2, "all-gather": 1,
+                           "reduce-scatter": 1, "all-to-all": 1,
+                           "collective-permute": 1}
+    S_ar = 512 * 1024 * 4
+    assert r["bytes"]["all-reduce"] == 2 * S_ar * (2 - 1) / 2 + 2 * 16 * 0.5
+    assert r["bytes"]["all-gather"] == 64 * 128 * 2 * 15 / 16
+    assert r["bytes"]["reduce-scatter"] == 16 * 4 * 3    # S_out·(g-1)
+    assert r["bytes"]["all-to-all"] == 2 * 2 * 4 * 3 / 4
+    assert r["bytes"]["collective-permute"] == 8 * 8 * 4
+    assert r["total_bytes"] == sum(r["bytes"].values())
+
+
+def test_collective_parser_ignores_done_and_noncollectives():
+    r = collective_bytes_from_hlo(
+        "%x = f32[4]{0} all-reduce-done(%y), replica_groups={{0,1}}")
+    assert r["total_bytes"] == 0
+    r = collective_bytes_from_hlo("%x = f32[4]{0} reduce(%y)")
+    assert r["total_bytes"] == 0
+    # group of 1 (degenerate) moves nothing
+    r = collective_bytes_from_hlo(
+        "%x = f32[4]{0} all-reduce(%y), replica_groups={{0}}")
+    assert r["total_bytes"] == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    rec = {
+        "cell": "llama3.2-1b/train_4k", "mesh": "pod16x16", "ok": True,
+        "analysis": {
+            "flops": 1.97e12,                 # exactly 10 ms of compute
+            "bytes_accessed": 819e9 * 0.02,   # 20 ms of HBM
+            "collectives": {"total_bytes": 50e9 * 0.001},
+            "corrected": {},
+        },
+    }
+    r = analyze_record(rec)
+    assert abs(r["compute_s"] - 0.01) < 1e-9
+    assert abs(r["memory_s"] - 0.02) < 1e-9
+    assert abs(r["collective_s"] - 0.001) < 1e-9
+    assert r["bottleneck"] == "memory"
+    assert r["model_over_hlo"] is not None
+
+
+def test_model_flops_formulas():
+    # train: 6·N_active·tokens; decode: 2·N_active·tokens
+    assert model_flops("llama3.2-1b", "train_4k") == \
+        6.0 * 1.24e9 * 4096 * 256
+    assert model_flops("kimi-k2-1t-a32b", "decode_32k") == \
+        2.0 * 32.6e9 * 128
+    assert model_flops("unknown-arch", "train_4k") is None

@@ -1,0 +1,113 @@
+"""End-to-end HEAAN scheme tests: the paper's claims, in miniature.
+
+Small (insecure) parameters keep the CPU cost down; the algebra is the same
+as the paper's (2^30, 40, 2^1200, 2^16) configuration.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import test_params as small_params
+from repro.core import heaan as H
+from repro.core.keys import keygen
+from repro.core.rns import PipelineConfig
+
+
+def _setup(beta, logN=5, logQ=120, logp=24, seed=7):
+    params = small_params(logN=logN, beta_bits=beta, logQ=logQ, logp=logp)
+    sk, pk, evk = keygen(params, seed=seed)
+    return params, sk, pk, evk
+
+
+def _rand_msg(n, rng, scale=1.0):
+    return scale * (rng.normal(size=n) + 1j * rng.normal(size=n))
+
+
+@pytest.mark.parametrize("beta", [32, 64])
+def test_encrypt_decrypt_roundtrip(beta):
+    params, sk, pk, evk = _setup(beta)
+    rng = np.random.default_rng(0)
+    z = _rand_msg(8, rng)
+    ct = H.encrypt_message(z, pk, params, seed=11)
+    out = H.decrypt_message(ct, sk, params)
+    err = np.abs(out - z).max()
+    assert err < 1e-4, err
+
+
+@pytest.mark.parametrize("beta", [32, 64])
+def test_he_add_homomorphism(beta):
+    params, sk, pk, evk = _setup(beta)
+    rng = np.random.default_rng(1)
+    z1, z2 = _rand_msg(16, rng), _rand_msg(16, rng)
+    c1 = H.encrypt_message(z1, pk, params, seed=12)
+    c2 = H.encrypt_message(z2, pk, params, seed=13)
+    out = H.decrypt_message(H.he_add(c1, c2), sk, params)
+    assert np.abs(out - (z1 + z2)).max() < 2e-4
+    out = H.decrypt_message(H.he_sub(c1, c2), sk, params)
+    assert np.abs(out - (z1 - z2)).max() < 2e-4
+
+
+@pytest.mark.parametrize("beta", [32, 64])
+def test_he_mul_homomorphism(beta):
+    params, sk, pk, evk = _setup(beta)
+    rng = np.random.default_rng(2)
+    z1, z2 = _rand_msg(8, rng), _rand_msg(8, rng)
+    c1 = H.encrypt_message(z1, pk, params, seed=14)
+    c2 = H.encrypt_message(z2, pk, params, seed=15)
+    c3 = H.rescale(H.he_mul(c1, c2, evk, params), params)
+    out = H.decrypt_message(c3, sk, params)
+    err = np.abs(out - z1 * z2).max()
+    assert err < 1e-3, err
+
+
+@pytest.mark.parametrize("beta", [32, 64])
+def test_he_mul_depth_chain(beta):
+    """Multi-level chain: rescale after every mul (paper §III-A lifecycle)."""
+    params, sk, pk, evk = _setup(beta)
+    rng = np.random.default_rng(3)
+    z = _rand_msg(4, rng, scale=0.9)
+    zs = _rand_msg(4, rng, scale=0.9)
+    ct = H.encrypt_message(z, pk, params, seed=16)
+    cs_fresh = H.encrypt_message(zs, pk, params, seed=17)
+    acc = z.copy()
+    for level in range(3):
+        cs = H.he_mod_down(cs_fresh, params, ct.logq)
+        ct = H.rescale(H.he_mul(ct, cs, evk, params), params)
+        acc = acc * zs
+        out = H.decrypt_message(ct, sk, params)
+        err = np.abs(out - acc).max()
+        assert err < 1e-2 * (level + 1), (level, err)
+    assert ct.logq == params.logQ - 3 * params.logp
+
+
+@pytest.mark.parametrize("cfgkw", [
+    dict(crt_strategy="shoup", icrt_strategy="acc3"),
+    dict(crt_strategy="acc3", icrt_strategy="naive"),
+    dict(crt_strategy="mod4", icrt_strategy="matmul"),
+    dict(modified_shoup=True),
+])
+def test_he_mul_strategy_ladder_agree(cfgkw):
+    """Every optimization-ladder configuration produces the same ciphertext."""
+    params, sk, pk, evk = _setup(32, logN=4)
+    rng = np.random.default_rng(4)
+    z1, z2 = _rand_msg(4, rng), _rand_msg(4, rng)
+    c1 = H.encrypt_message(z1, pk, params, seed=18)
+    c2 = H.encrypt_message(z2, pk, params, seed=19)
+    base = H.he_mul(c1, c2, evk, params)
+    alt = H.he_mul(c1, c2, evk, params, cfg=PipelineConfig(**cfgkw))
+    np.testing.assert_array_equal(np.asarray(base.ax), np.asarray(alt.ax))
+    np.testing.assert_array_equal(np.asarray(base.bx), np.asarray(alt.bx))
+
+
+@pytest.mark.parametrize("beta", [32, 64])
+def test_mul_then_add_mixed_circuit(beta):
+    params, sk, pk, evk = _setup(beta)
+    rng = np.random.default_rng(5)
+    z1, z2, z3 = (_rand_msg(8, rng) for _ in range(3))
+    c1 = H.encrypt_message(z1, pk, params, seed=20)
+    c2 = H.encrypt_message(z2, pk, params, seed=21)
+    c3 = H.encrypt_message(z3, pk, params, seed=22)
+    prod = H.rescale(H.he_mul(c1, c2, evk, params), params)
+    c3_l = H.he_mod_down(c3, params, prod.logq)   # level-align, same scale
+    out = H.decrypt_message(H.he_add(prod, c3_l), sk, params)
+    assert np.abs(out - (z1 * z2 + z3)).max() < 5e-3

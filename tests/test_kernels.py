@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracles: exact equality, shape sweeps.
+
+Integer kernels — no tolerance. All run in interpret mode on CPU (the
+kernel bodies execute exactly as they would lower for TPU).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import test_params as small_params
+from repro.core import make_context
+from repro.core.context import build_icrt_tables
+from repro.kernels.crt.ops import crt_op
+from repro.kernels.crt.ref import crt_ref
+from repro.kernels.icrt.ops import icrt_op
+from repro.kernels.icrt.ref import icrt_ref
+from repro.kernels.modmul.ops import pointwise_mont_op
+from repro.kernels.modmul.ref import pointwise_mont_ref
+from repro.kernels.ntt.ops import intt_op, ntt_op
+from repro.kernels.ntt.ref import intt_ref, ntt_ref
+from repro.nt.residue import ints_to_limb_array
+
+import random
+
+
+def _ctx(logN=5, logQ=120, logp=24):
+    p = small_params(logN=logN, beta_bits=32, logQ=logQ, logp=logp)
+    return p, make_context(p, p.logQ)
+
+
+def _rand_residues(g, npn, N, seed=0):
+    rng = np.random.default_rng(seed)
+    primes = np.asarray(g.primes[:npn]).astype(np.uint64)
+    return (rng.integers(0, 1 << 62, size=(npn, N)).astype(np.uint64)
+            % primes[:, None]).astype(np.uint32)
+
+
+@pytest.mark.parametrize("logN", [4, 5, 7, 9])
+@pytest.mark.parametrize("modified", [False, True])
+def test_ntt_kernel_matches_ref(logN, modified):
+    p, ctx = _ctx(logN=logN)
+    g = ctx.tables
+    npn, N = ctx.np1, ctx.N
+    x = jnp.asarray(_rand_residues(g, npn, N, seed=logN))
+    args = (jnp.asarray(g.psi_rev[:npn]), jnp.asarray(g.psi_rev_shoup[:npn]),
+            jnp.asarray(g.primes[:npn]))
+    np.testing.assert_array_equal(
+        np.asarray(ntt_op(x, *args, modified=modified)),
+        np.asarray(ntt_ref(x, *args, modified=modified)))
+
+
+@pytest.mark.parametrize("logN", [4, 5, 7, 9])
+def test_intt_kernel_matches_ref_and_roundtrip(logN):
+    p, ctx = _ctx(logN=logN)
+    g = ctx.tables
+    npn, N = ctx.np2, ctx.N
+    x = jnp.asarray(_rand_residues(g, npn, N, seed=10 + logN))
+    fargs = (jnp.asarray(g.psi_rev[:npn]), jnp.asarray(g.psi_rev_shoup[:npn]),
+             jnp.asarray(g.primes[:npn]))
+    iargs = (jnp.asarray(g.ipsi_rev[:npn]),
+             jnp.asarray(g.ipsi_rev_shoup[:npn]),
+             jnp.asarray(g.n_inv[:npn]), jnp.asarray(g.n_inv_shoup[:npn]),
+             jnp.asarray(g.primes[:npn]))
+    ev = ntt_op(x, *fargs)
+    np.testing.assert_array_equal(np.asarray(intt_op(ev, *iargs)),
+                                  np.asarray(intt_ref(ev, *iargs)))
+    np.testing.assert_array_equal(np.asarray(intt_op(ev, *iargs)),
+                                  np.asarray(x))
+
+
+@pytest.mark.parametrize("logN,logQ", [(4, 96), (5, 120), (6, 240)])
+@pytest.mark.parametrize("strategy", ["acc3", "mod2", "mod4"])
+def test_crt_kernel_matches_ref(logN, logQ, strategy):
+    p, ctx = _ctx(logN=logN, logQ=logQ)
+    g = ctx.tables
+    npn, K, N = ctx.np2, ctx.qlimbs, ctx.N
+    pr = random.Random(logN * 100 + logQ)
+    vals = [pr.getrandbits(logQ) for _ in range(N)]
+    x = jnp.asarray(ints_to_limb_array(vals, K, 32))
+    args = (jnp.asarray(g.crt_tb[:npn, :K]),
+            jnp.asarray(g.crt_tb_shoup[:npn, :K]),
+            jnp.asarray(g.primes[:npn]))
+    np.testing.assert_array_equal(
+        np.asarray(crt_op(x, *args, strategy=strategy)),
+        np.asarray(crt_ref(x, *args)))
+
+
+@pytest.mark.parametrize("logN,logQ", [(4, 96), (5, 120), (6, 240)])
+def test_icrt_kernel_matches_ref(logN, logQ):
+    p, ctx = _ctx(logN=logN, logQ=logQ)
+    g = ctx.tables
+    npn, N = ctx.np1, ctx.N
+    tabs = ctx.icrt1
+    r = jnp.asarray(_rand_residues(g, npn, N, seed=20 + logN))
+    out_limbs = ctx.qlimbs
+    got = icrt_op(r, tabs, g, out_limbs)
+    ref = icrt_ref(r, tabs, g, out_limbs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_icrt_kernel_boundary_values():
+    """Residues of 0, ±1, ±(P-1)/2-ish — the quotient-trick edge cases."""
+    p, ctx = _ctx(logN=4)
+    g = ctx.tables
+    npn, N = ctx.np1, ctx.N
+    tabs = ctx.icrt1
+    primes_py = [int(v) for v in np.asarray(g.primes[:npn])]
+    vals = [0, 1, -1, 2, -2, tabs.P_int // 2 - 1, -(tabs.P_int // 2) + 1,
+            123456789, -987654321] + [0] * (N - 9)
+    res = np.stack([[v % pj for v in vals] for pj in primes_py]
+                   ).astype(np.uint32)
+    got = icrt_op(jnp.asarray(res), tabs, g, tabs.accum_limbs)
+    ref = icrt_ref(jnp.asarray(res), tabs, g, tabs.accum_limbs,
+                   strategy="acc3")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("npn,N", [(3, 64), (8, 128), (13, 512)])
+def test_modmul_kernel_matches_ref(npn, N):
+    p, ctx = _ctx(logN=5)
+    g = ctx.tables
+    npn = min(npn, ctx.np2)
+    a = jnp.asarray(_rand_residues(g, npn, N, seed=30))
+    b = jnp.asarray(_rand_residues(g, npn, N, seed=31))
+    args = (jnp.asarray(g.primes[:npn]), jnp.asarray(g.pprime[:npn]),
+            jnp.asarray(g.r2[:npn]))
+    np.testing.assert_array_equal(
+        np.asarray(pointwise_mont_op(a, b, *args)),
+        np.asarray(pointwise_mont_ref(a, b, *args)))
+
+
+def test_full_he_mul_through_kernels():
+    """End-to-end HE Mul with every stage routed through Pallas kernels."""
+    from repro.core import heaan as H
+    from repro.core.keys import keygen
+    from repro.core.rns import PipelineConfig
+
+    params = small_params(logN=4, beta_bits=32)
+    sk, pk, evk = keygen(params, seed=3)
+    rng = np.random.default_rng(40)
+    z1 = rng.normal(size=4) + 1j * rng.normal(size=4)
+    z2 = rng.normal(size=4) + 1j * rng.normal(size=4)
+    c1 = H.encrypt_message(z1, pk, params, seed=41)
+    c2 = H.encrypt_message(z2, pk, params, seed=42)
+    base = H.he_mul(c1, c2, evk, params)
+    kern = H.he_mul(c1, c2, evk, params,
+                    cfg=PipelineConfig(use_kernels=True))
+    np.testing.assert_array_equal(np.asarray(base.ax), np.asarray(kern.ax))
+    np.testing.assert_array_equal(np.asarray(base.bx), np.asarray(kern.bx))

@@ -1,0 +1,98 @@
+"""Optimizer, schedule, compression, and data-pipeline unit tests."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+from repro.optim.compress import compress_int8, decompress_int8
+from repro.data import SyntheticLM
+from repro.configs.registry import get_arch
+
+
+def test_adamw_matches_reference_formula():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))}
+    g = {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))}
+    st = adamw_init(p)
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.95, 1e-8, 0.1
+    p2, st2, m = adamw_update(g, st, p, lr=lr, b1=b1, b2=b2, eps=eps,
+                              weight_decay=wd, clip_norm=1e9)
+    gn = np.linalg.norm(np.asarray(g["w"]))
+    mu = (1 - b1) * np.asarray(g["w"])
+    nu = (1 - b2) * np.asarray(g["w"]) ** 2
+    mhat = mu / (1 - b1)
+    vhat = nu / (1 - b2)
+    expect = np.asarray(p["w"]) - lr * (
+        mhat / (np.sqrt(vhat) + eps) + wd * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(p2["w"]), expect, rtol=1e-5)
+    assert abs(float(m["grad_norm"]) - gn) < 1e-4
+    assert int(st2.step) == 1
+
+
+def test_adamw_clip_scales_gradients():
+    p = {"w": jnp.ones((2,), jnp.float32)}
+    g = {"w": jnp.full((2,), 100.0, jnp.float32)}
+    st = adamw_init(p)
+    _, _, m = adamw_update(g, st, p, lr=0.0, clip_norm=1.0)
+    assert float(m["clip_scale"]) < 0.01
+
+
+def test_adamw_bf16_moments_shapes_and_dtype():
+    p = {"w": jnp.ones((8,), jnp.bfloat16)}
+    st = adamw_init(p, moments_dtype=jnp.bfloat16)
+    assert st.mu["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((8,), 0.1, jnp.bfloat16)}
+    p2, st2, _ = adamw_update(g, st, p, lr=1e-2)
+    assert st2.mu["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) == 0.0
+    assert abs(float(warmup_cosine(10, peak_lr=1.0, warmup_steps=10,
+                                   total_steps=100)) - 1.0) < 1e-6
+    end = float(warmup_cosine(100, peak_lr=1.0, warmup_steps=10,
+                              total_steps=100))
+    assert abs(end - 0.1) < 1e-6
+
+
+def test_int8_compression_roundtrip_error_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32) * 5)
+    q8, scale, meta = compress_int8(x, jax.random.key(0))
+    back = decompress_int8(q8, scale, meta)
+    # per-block error bounded by the quantization step
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert err.max() <= float(scale.max()) * 1.01
+
+
+def test_synthetic_data_counter_deterministic():
+    cfg = get_arch("llama3.2-1b").reduced()
+    d1 = SyntheticLM(cfg, 4, 32, seed=7)
+    d2 = SyntheticLM(cfg, 4, 32, seed=7)
+    b1, b2 = d1.batch_at(13), d2.batch_at(13)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = d1.batch_at(14)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    # labels are next-token shifted
+    # (tokens[t+1] == labels[t] wherever both derive from the same seq)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+
+
+def test_synthetic_shard_slice():
+    cfg = get_arch("llama3.2-1b").reduced()
+    d = SyntheticLM(cfg, 8, 16, seed=0)
+    b = d.batch_at(0)
+    s0 = d.shard_slice(b, 0, 4)
+    s3 = d.shard_slice(b, 3, 4)
+    assert s0["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(np.asarray(s3["tokens"]),
+                                  np.asarray(b["tokens"][6:8]))

@@ -1,0 +1,95 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import test_params as small_params
+from repro.core import make_context
+from repro.core import rns
+from repro.core.context import build_global_tables
+from repro.nt.residue import limbs_to_int
+
+
+PARAMS = small_params(logN=4, beta_bits=32)
+CTX = make_context(PARAMS, PARAMS.logQ)
+G = build_global_tables(PARAMS)
+
+
+@given(st.lists(st.integers(min_value=-(2**100), max_value=2**100),
+                min_size=16, max_size=16))
+@settings(max_examples=20, deadline=None)
+def test_to_eval_from_eval_roundtrip_is_centered_identity(vals):
+    """from_eval(to_eval(x)) == x for any |x| < min(P/2, 2^(K·β-1))."""
+    npn = CTX.np1
+    K = CTX.qlimbs
+    lim = min(CTX.icrt1.P_int // 2, 1 << (K * 32 - 2)) - 1
+    vals = [max(-lim, min(lim, v)) for v in vals]
+    enc = np.zeros((16, K), dtype=np.uint32)
+    for i, v in enumerate(vals):
+        vv = v % (1 << (K * 32))
+        for k in range(K):
+            enc[i, k] = (vv >> (32 * k)) & 0xFFFFFFFF
+    ev = rns.to_eval(jnp.asarray(enc), npn, G)
+    back = rns.from_eval(ev, PARAMS, K, G)
+    W = 1 << (K * 32)
+    for i, v in enumerate(vals):
+        got = limbs_to_int(np.asarray(back[i]), 32)
+        if got >= W // 2:
+            got -= W
+        assert got == v, (i, got, v)
+
+
+@given(st.integers(min_value=0, max_value=2**120 - 1),
+       st.integers(min_value=0, max_value=2**120 - 1))
+@settings(max_examples=20, deadline=None)
+def test_poly_mul_degree0_matches_int_mul(a, b):
+    """Multiplying constant polynomials == BigInt multiplication mod q."""
+    K = PARAMS.qlimbs(PARAMS.logQ)
+    N = PARAMS.N
+
+    def enc(v):
+        out = np.zeros((N, K), dtype=np.uint32)
+        for k in range(K):
+            out[0, k] = (v >> (32 * k)) & 0xFFFFFFFF
+        return jnp.asarray(out)
+
+    prod = rns.poly_mul(enc(a), enc(b), 120, 120, PARAMS, G,
+                        PARAMS.limbs_for_bits(242))
+    got = limbs_to_int(np.asarray(prod[0]), 32)
+    W = 1 << (PARAMS.limbs_for_bits(242) * 32)
+    if got >= W // 2:
+        got -= W
+    assert got == a * b
+    # every other coefficient must be exactly zero
+    rest = np.asarray(prod[1:])
+    assert (rest == 0).all()
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**119), min_size=2,
+                max_size=2))
+@settings(max_examples=10, deadline=None)
+def test_eval_domain_add_is_homomorphic(pair):
+    """to_eval(x) ⊕ to_eval(y) == to_eval(x + y mod q) (RNS congruence)."""
+    from repro.core import bigint
+    a, b = pair
+    K = CTX.qlimbs
+    npn = CTX.np1
+
+    def enc(v):
+        out = np.zeros((PARAMS.N, K), dtype=np.uint32)
+        rngv = v
+        for k in range(K):
+            out[0, k] = (rngv >> (32 * k)) & 0xFFFFFFFF
+        return jnp.asarray(out)
+
+    ea = rns.to_eval(enc(a), npn, G)
+    eb = rns.to_eval(enc(b), npn, G)
+    s_limbs = bigint.mask_bits(bigint.add(enc(a), enc(b)), PARAMS.logQ)
+    lhs = rns.eval_add(ea, eb, G)
+    rhs = rns.to_eval(s_limbs, npn, G)
+    # additive homomorphism holds exactly when no q-overflow occurred
+    if a + b < (1 << PARAMS.logQ):
+        np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))

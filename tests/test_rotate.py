@@ -1,0 +1,73 @@
+"""Galois rotation / conjugation tests (slot semantics + slot-sum app)."""
+
+import numpy as np
+import pytest
+
+from repro.core import heaan as H
+from repro.core import test_params as small_params
+from repro.core.keys import keygen
+from repro.core.rotate import (
+    conj_keygen, he_conjugate, he_rotate, rot_keygen,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = small_params(logN=5, beta_bits=32)
+    sk, pk, evk = keygen(params, seed=0)
+    return params, sk, pk, evk
+
+
+def test_rotation_rolls_slots(setup):
+    params, sk, pk, _ = setup
+    n = 8
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=n) + 1j * rng.normal(size=n)
+    ct = H.encrypt_message(z, pk, params, seed=1)
+    for r in (1, 3):
+        rk = rot_keygen(params, sk, r)
+        out = H.decrypt_message(he_rotate(ct, r, rk, params), sk, params)
+        expect = np.roll(z, -r)
+        assert np.abs(out - expect).max() < 1e-3, r
+
+
+def test_conjugation(setup):
+    params, sk, pk, _ = setup
+    rng = np.random.default_rng(1)
+    z = rng.normal(size=8) + 1j * rng.normal(size=8)
+    ct = H.encrypt_message(z, pk, params, seed=2)
+    ck = conj_keygen(params, sk)
+    out = H.decrypt_message(he_conjugate(ct, ck, params), sk, params)
+    assert np.abs(out - np.conj(z)).max() < 1e-3
+
+
+def test_slot_sum_via_log_rotations(setup):
+    """Σ over slots with log₂(n) rotations — the primitive encrypted
+    dot-products need (paper's logistic-regression application class)."""
+    params, sk, pk, _ = setup
+    n = 8
+    rng = np.random.default_rng(2)
+    z = rng.normal(size=n)
+    ct = H.encrypt_message(z.astype(np.complex128), pk, params, seed=3)
+    acc = ct
+    r = 1
+    while r < n:
+        rk = rot_keygen(params, sk, r)
+        acc = H.he_add(acc, he_rotate(acc, r, rk, params))
+        r *= 2
+    out = H.decrypt_message(acc, sk, params)
+    # every slot now holds the total sum
+    np.testing.assert_allclose(out.real, np.full(n, z.sum()), atol=1e-2)
+
+
+def test_rotation_composes_with_mul(setup):
+    params, sk, pk, evk = setup
+    rng = np.random.default_rng(3)
+    z1 = rng.normal(size=8) + 1j * rng.normal(size=8)
+    z2 = rng.normal(size=8) + 1j * rng.normal(size=8)
+    c1 = H.encrypt_message(z1, pk, params, seed=4)
+    c2 = H.encrypt_message(z2, pk, params, seed=5)
+    prod = H.rescale(H.he_mul(c1, c2, evk, params), params)
+    rk = rot_keygen(params, sk, 2)
+    out = H.decrypt_message(he_rotate(prod, 2, rk, params), sk, params)
+    assert np.abs(out - np.roll(z1 * z2, -2)).max() < 5e-3

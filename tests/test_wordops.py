@@ -1,0 +1,127 @@
+"""Word-level modular arithmetic vs python-int oracles."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core import wordops as W
+from repro.nt.primes import find_ntt_primes, shoup_precompute
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_words(n, bits, rng=RNG):
+    if bits == 32:
+        return rng.integers(0, 1 << 32, size=n, dtype=np.uint32)
+    return rng.integers(0, 1 << 63, size=n, dtype=np.uint64) * 2 + \
+        rng.integers(0, 2, size=n, dtype=np.uint64)
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+def test_mul_wide_exact(bits):
+    a = _rand_words(512, bits)
+    b = _rand_words(512, bits)
+    hi, lo = W.mul_wide(jnp.asarray(a), jnp.asarray(b))
+    for i in range(len(a)):
+        prod = int(a[i]) * int(b[i])
+        assert int(lo[i]) == prod % (1 << bits)
+        assert int(hi[i]) == prod >> bits
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+def test_mulhi_approx3_underestimates_by_at_most_2(bits):
+    a = _rand_words(2048, bits)
+    b = _rand_words(2048, bits)
+    approx = np.asarray(W.mulhi_approx3(jnp.asarray(a), jnp.asarray(b)))
+    for i in range(len(a)):
+        true_hi = (int(a[i]) * int(b[i])) >> bits
+        diff = true_hi - int(approx[i])
+        assert 0 <= diff <= 2, (a[i], b[i], diff)
+
+
+@pytest.mark.parametrize("bits,lo,hi", [(32, 28, 30), (64, 57, 60)])
+def test_shoup_modmul(bits, lo, hi):
+    primes = find_ntt_primes(64, 6, lo, hi)
+    for p in primes:
+        x = _rand_words(256, bits) % np.uint64(p) if bits == 64 else \
+            (_rand_words(256, 32).astype(np.uint64) % np.uint64(p)).astype(np.uint32)
+        y = int(_rand_words(1, bits)[0]) % p
+        ysh = shoup_precompute(y, p, bits)
+        dt = jnp.uint32 if bits == 32 else jnp.uint64
+        r = W.shoup_modmul(jnp.asarray(x, dt), jnp.asarray(y, dt),
+                           jnp.asarray(ysh, dt), jnp.asarray(p, dt))
+        rm = W.shoup_modmul_modified(jnp.asarray(x, dt), jnp.asarray(y, dt),
+                                     jnp.asarray(ysh, dt), jnp.asarray(p, dt))
+        expect = (np.array([int(v) for v in x], dtype=object) * y) % p
+        np.testing.assert_array_equal(
+            np.array([int(v) for v in r], dtype=object), expect)
+        np.testing.assert_array_equal(
+            np.array([int(v) for v in rm], dtype=object), expect)
+
+
+@pytest.mark.parametrize("bits,lo,hi", [(32, 28, 30), (64, 57, 60)])
+def test_shoup_reduces_full_word_with_y1(bits, lo, hi):
+    """Y=1 Shoup reduces an arbitrary β-bit word mod p (paper's accum fold)."""
+    p = find_ntt_primes(64, 1, lo, hi)[0]
+    x = _rand_words(4096, bits)
+    dt = jnp.uint32 if bits == 32 else jnp.uint64
+    ysh = shoup_precompute(1, p, bits)
+    r = W.shoup_modmul(jnp.asarray(x, dt), jnp.asarray(1, dt),
+                       jnp.asarray(ysh, dt), jnp.asarray(p, dt))
+    expect = np.array([int(v) % p for v in x], dtype=object)
+    np.testing.assert_array_equal(
+        np.array([int(v) for v in r], dtype=object), expect)
+
+
+@pytest.mark.parametrize("bits,lo,hi", [(32, 28, 30), (64, 57, 60)])
+def test_montgomery_modmul(bits, lo, hi):
+    primes = find_ntt_primes(64, 4, lo, hi)
+    R = 1 << bits
+    dt = jnp.uint32 if bits == 32 else jnp.uint64
+    for p in primes:
+        pprime = (-pow(p, -1, R)) % R
+        r2 = (R * R) % p
+        a = np.array([int(v) % p for v in _rand_words(256, bits)],
+                     dtype=np.uint64)
+        b = np.array([int(v) % p for v in _rand_words(256, bits)],
+                     dtype=np.uint64)
+        out = W.mont_modmul(jnp.asarray(a, dt), jnp.asarray(b, dt),
+                            jnp.asarray(p, dt), jnp.asarray(pprime, dt),
+                            jnp.asarray(r2, dt))
+        expect = (a.astype(object) * b.astype(object)) % p
+        np.testing.assert_array_equal(
+            np.array([int(v) for v in out], dtype=object), expect)
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1)),
+                min_size=1, max_size=200))
+@settings(max_examples=25, deadline=None)
+def test_acc3_chain_property(pairs):
+    """3-word accumulator matches exact Σ a·b for any u32 sequence."""
+    a2 = a1 = a0 = jnp.zeros((), jnp.uint32)
+    total = 0
+    for a, b in pairs:
+        a2, a1, a0 = W.acc3_add_product(
+            a2, a1, a0, jnp.asarray(a, jnp.uint32), jnp.asarray(b, jnp.uint32))
+        total += a * b
+    got = int(a0) + (int(a1) << 32) + (int(a2) << 64)
+    assert got == total % (1 << 96)
+    assert total < (1 << 96)  # 200 u32 products always fit 3 words
+
+
+@pytest.mark.parametrize("bits", [32, 64])
+def test_modadd_modsub(bits):
+    p = find_ntt_primes(64, 1, 28 if bits == 32 else 57,
+                        30 if bits == 32 else 60)[0]
+    dt = jnp.uint32 if bits == 32 else jnp.uint64
+    a = np.array([int(v) % p for v in _rand_words(512, bits)], dtype=np.uint64)
+    b = np.array([int(v) % p for v in _rand_words(512, bits)], dtype=np.uint64)
+    s = W.modadd(jnp.asarray(a, dt), jnp.asarray(b, dt), jnp.asarray(p, dt))
+    d = W.modsub(jnp.asarray(a, dt), jnp.asarray(b, dt), jnp.asarray(p, dt))
+    np.testing.assert_array_equal(np.asarray(s).astype(object),
+                                  (a.astype(object) + b.astype(object)) % p)
+    np.testing.assert_array_equal(np.asarray(d).astype(object),
+                                  (a.astype(object) - b.astype(object)) % p)
