@@ -1,0 +1,20 @@
+"""Distribution layer: sharding rules, the mesh-sharded HE-Mul pipeline,
+and explicit compressed collectives.
+
+The paper's residue-level parallelism (§V: one prime per thread, transposed
+layouts) maps directly onto a JAX device mesh: the `np` CRT primes of HE Mul
+live on the "model" axis (HEAX's per-modulus hardware lanes, as mesh shards)
+while batches of ciphertexts / training examples live on the "data" axis.
+
+Modules:
+  - sharding:    NamedSharding rule engines for HE limb tensors, LM params,
+                 KV caches, batches, and ZeRO-1 optimizer state.
+  - he_pipeline: the paper's Fig. 2 two-region HE Mul as a single jit-able,
+                 mesh-sharded step, bitwise identical to core.heaan.he_mul.
+  - collectives: int8 compress -> all-gather -> decompress gradient
+                 reduction (composes with optim.compress).
+"""
+
+from repro.dist import collectives, he_pipeline, sharding  # noqa: F401
+
+__all__ = ["sharding", "he_pipeline", "collectives"]

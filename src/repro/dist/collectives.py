@@ -1,0 +1,56 @@
+"""Explicit compressed collectives for the shard_map DP training path.
+
+`compressed_psum_grads` is the wire protocol `optim/compress.py` documents:
+each device int8-block-quantizes its local gradient shard (stochastic
+rounding, per-256-block f32 scales), the int8 payloads + scales are
+all-gathered (4× less traffic than an f32 ring all-reduce), and every
+device dequantizes per source and averages. Because each replica averages
+the same gathered data in the same order, all replicas hold bit-identical
+results — the property tests/test_dist.py asserts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compress import compress_int8, decompress_int8
+
+__all__ = ["compressed_psum_grads"]
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+def _axis_size(axis_names: AxisNames) -> jnp.ndarray:
+    return jax.lax.psum(jnp.ones((), jnp.int32), axis_names)
+
+
+def compressed_psum_grads(grads: Any, axis_names: AxisNames, key) -> Any:
+    """Mean-reduce a gradient pytree across `axis_names` in int8.
+
+    Must be called inside shard_map (or pmap) with `axis_names` bound.
+    Returns the dequantized mean with the original shapes/dtypes; every
+    participant returns the same values. Error per element is bounded by
+    one quantization step (≤ max|g| / 127 of the worst shard).
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    out = []
+    for i, g in enumerate(leaves):
+        q8, scale, meta = compress_int8(g, keys[i])
+        # all-gather the compressed payload — the only wire traffic
+        q_all = jax.lax.all_gather(q8, axis_names, tiled=False)
+        s_all = jax.lax.all_gather(scale, axis_names, tiled=False)
+        # multi-axis all_gather stacks one dim per axis; flatten to (W, ...)
+        q_all = q_all.reshape((-1,) + q8.shape)
+        s_all = s_all.reshape((-1,) + scale.shape)
+        deq = jax.vmap(lambda q, s: decompress_int8(q, s, meta))(
+            q_all, s_all)
+        mean = deq.sum(axis=0) / _axis_size(axis_names).astype(jnp.float32)
+        out.append(mean.astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)

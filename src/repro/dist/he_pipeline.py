@@ -1,0 +1,316 @@
+"""The paper's Fig. 2 two-region HE Mul as one jit-able, mesh-sharded step.
+
+This is `core.heaan.he_mul` restructured for a device mesh:
+
+  - a BATCH of ciphertext pairs (the unit a privacy-preserving serving
+    system schedules) rides the "data" mesh axis;
+  - the np CRT primes ride the "model" axis — the paper's §V-A pinning of
+    primes to threads (and HEAX's per-modulus hardware lanes) expressed as
+    GSPMD sharding, so CRT/NTT/pointwise/iNTT stages are embarrassingly
+    parallel and only iCRT's cross-prime accumulation communicates;
+  - every table is passed as a pytree argument (not baked as constants),
+    so the whole step traces ONCE and re-runs for any batch with the same
+    static shape.
+
+Bitwise contract: the step reuses the exact `core` stage functions (crt,
+ntt, mont pointwise, intt, icrt, BigInt combine) in the same order as
+`core.heaan.he_mul`, and sharding is expressed only through placement
+constraints — integer limb arithmetic partitions exactly, and iCRT's f64
+quotient estimate is followed by exact ±1 corrections — so the sharded
+output equals the single-device reference bit for bit (tests/test_dist.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bigint
+from repro.core.cipher import EvalKey
+from repro.core.context import (
+    HEContext, IcrtTables, build_icrt_tables,
+)
+from repro.core.crt import crt, icrt
+from repro.core.ntt import intt, ntt, pointwise_shoup_scale
+from repro.core.params import HEParams
+from repro.core.wordops import modadd, modsub, mont_modmul
+from repro.dist.sharding import data_axes, he_eval_sharding
+
+__all__ = [
+    "HEStatic", "he_static", "region_tables", "evk_tables",
+    "runtime_tables", "he_table_specs", "he_input_specs",
+    "make_he_mul_step",
+]
+
+# Keys of a region-table pytree, in the order region_tables emits them.
+REGION_TABLE_KEYS = (
+    "primes", "psi_rev", "psi_rev_shoup", "ipsi_rev", "ipsi_rev_shoup",
+    "n_inv", "n_inv_shoup", "pprime", "r2", "crt_tb", "crt_tb_shoup",
+    "inv_P", "inv_P_shoup", "pdivp", "P_limbs", "P_half_limbs", "p_inv_f64",
+)
+
+EVK_TABLE_KEYS = ("ax_ev", "ax_ev_shoup", "bx_ev", "bx_ev_shoup")
+
+
+@dataclasses.dataclass(frozen=True)
+class HEStatic:
+    """Everything shape-static about one HE-Mul level: prime counts, limb
+    widths, and the iCRT accumulator tables' static metadata. Cheap to
+    build (no NTT twiddles) — dry-run lowering needs only this."""
+
+    params: HEParams
+    logq: int
+    qlimbs: int
+    np1: int
+    np2: int
+    np2_max: int          # rows of the stored evk (region 2 at logQ)
+    ks_limbs: int         # key-switch product width before ÷Q
+    icrt1: IcrtTables
+    icrt2: IcrtTables
+
+    @property
+    def N(self) -> int:
+        return self.params.N
+
+    @property
+    def dtype(self):
+        return np.uint32 if self.params.beta_bits == 32 else np.uint64
+
+
+def he_static(params: HEParams, logq: int) -> HEStatic:
+    """Static shape/table metadata for an HE Mul at modulus 2^logq."""
+    np1 = params.np_region1(logq)
+    np2 = params.np_region2(logq)
+    return HEStatic(
+        params=params,
+        logq=logq,
+        qlimbs=params.qlimbs(logq),
+        np1=np1,
+        np2=np2,
+        np2_max=params.np_region2(params.logQ),
+        ks_limbs=params.limbs_for_bits(logq + params.logQ) + 1,
+        icrt1=build_icrt_tables(params, np1),
+        icrt2=build_icrt_tables(params, np2),
+    )
+
+
+# --------------------------------------------------------------------------
+# table pytrees
+# --------------------------------------------------------------------------
+
+def region_tables(ctx: HEContext, region: int) -> Dict[str, np.ndarray]:
+    """All tables one region's CRT→NTT→iNTT→iCRT chain consumes, as a flat
+    dict of host arrays (callers jnp.asarray / device_put them; the step
+    takes them as arguments so nothing is baked into the jaxpr)."""
+    assert region in (1, 2)
+    g = ctx.tables
+    npn = ctx.np1 if region == 1 else ctx.np2
+    tabs = ctx.icrt1 if region == 1 else ctx.icrt2
+    K = ctx.qlimbs
+    return {
+        "primes": g.primes[:npn],
+        "psi_rev": g.psi_rev[:npn],
+        "psi_rev_shoup": g.psi_rev_shoup[:npn],
+        "ipsi_rev": g.ipsi_rev[:npn],
+        "ipsi_rev_shoup": g.ipsi_rev_shoup[:npn],
+        "n_inv": g.n_inv[:npn],
+        "n_inv_shoup": g.n_inv_shoup[:npn],
+        "pprime": g.pprime[:npn],
+        "r2": g.r2[:npn],
+        "crt_tb": g.crt_tb[:npn, :K],
+        "crt_tb_shoup": g.crt_tb_shoup[:npn, :K],
+        "inv_P": tabs.inv_P,
+        "inv_P_shoup": tabs.inv_P_shoup,
+        "pdivp": tabs.pdivp,
+        "P_limbs": tabs.P_limbs,
+        "P_half_limbs": tabs.P_half_limbs,
+        "p_inv_f64": g.p_inv_f64[:npn],
+    }
+
+
+def evk_tables(evk: EvalKey) -> Dict[str, jnp.ndarray]:
+    """The evaluation key as a flat pytree (already eval-domain + Shoup;
+    the step slices rows [:np2] for the current level)."""
+    return {
+        "ax_ev": evk.ax_ev,
+        "ax_ev_shoup": evk.ax_ev_shoup,
+        "bx_ev": evk.bx_ev,
+        "bx_ev_shoup": evk.bx_ev_shoup,
+    }
+
+
+def runtime_tables(ctx: HEContext, evk: EvalKey) -> Tuple[Dict, Dict, Dict]:
+    """Device-ready (t1, t2, ek) pytrees for running the step (the runtime
+    counterpart of he_table_specs; tables replicate across the mesh)."""
+    t1 = {k: jnp.asarray(v) for k, v in region_tables(ctx, 1).items()}
+    t2 = {k: jnp.asarray(v) for k, v in region_tables(ctx, 2).items()}
+    ek = {k: jnp.asarray(v) for k, v in evk_tables(evk).items()}
+    return t1, t2, ek
+
+
+def _region_spec(st: HEStatic, npn: int, tabs: IcrtTables) -> Dict:
+    dt = st.dtype
+    N = st.N
+    sds = jax.ShapeDtypeStruct
+    return {
+        "primes": sds((npn,), dt),
+        "psi_rev": sds((npn, N), dt),
+        "psi_rev_shoup": sds((npn, N), dt),
+        "ipsi_rev": sds((npn, N), dt),
+        "ipsi_rev_shoup": sds((npn, N), dt),
+        "n_inv": sds((npn,), dt),
+        "n_inv_shoup": sds((npn,), dt),
+        "pprime": sds((npn,), dt),
+        "r2": sds((npn,), dt),
+        "crt_tb": sds((npn, st.qlimbs), dt),
+        "crt_tb_shoup": sds((npn, st.qlimbs), dt),
+        "inv_P": sds((npn,), dt),
+        "inv_P_shoup": sds((npn,), dt),
+        "pdivp": sds((npn, tabs.plimbs), dt),
+        "P_limbs": sds((tabs.accum_limbs,), dt),
+        "P_half_limbs": sds((tabs.accum_limbs,), dt),
+        "p_inv_f64": sds((npn,), np.float64),
+    }
+
+
+def he_table_specs(st: HEStatic) -> Tuple[Dict, Dict, Dict]:
+    """Abstract (t1, t2, ek) pytrees for lowering without building the
+    multi-second NTT twiddle tables (the dry-run path)."""
+    t1 = _region_spec(st, st.np1, st.icrt1)
+    t2 = _region_spec(st, st.np2, st.icrt2)
+    sds = jax.ShapeDtypeStruct
+    ek = {k: sds((st.np2_max, st.N), st.dtype) for k in EVK_TABLE_KEYS}
+    return t1, t2, ek
+
+
+def he_input_specs(st: HEStatic, batch: int) -> Tuple:
+    """Abstract (ax1, bx1, ax2, bx2) ciphertext-batch operands."""
+    sds = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype)
+    return (sds, sds, sds, sds)
+
+
+# --------------------------------------------------------------------------
+# batched stage wrappers (value-identical to the per-item core stages)
+# --------------------------------------------------------------------------
+
+def _crt_b(x: jnp.ndarray, t: Dict, strategy: str) -> jnp.ndarray:
+    """(B, N, K) limbs -> (B, np, N) residues. CRT rows are independent
+    per coefficient, so batching folds into the row dimension exactly."""
+    B, N, K = x.shape
+    res = crt(x.reshape(B * N, K), t["crt_tb"], t["crt_tb_shoup"],
+              t["primes"], strategy=strategy)
+    return jnp.moveaxis(res.reshape(res.shape[0], B, N), 0, 1)
+
+
+def _ntt_b(r: jnp.ndarray, t: Dict, modified: bool) -> jnp.ndarray:
+    return jax.vmap(lambda rr: ntt(
+        rr, t["psi_rev"], t["psi_rev_shoup"], t["primes"],
+        modified=modified))(r)
+
+
+def _intt_b(r: jnp.ndarray, t: Dict, modified: bool) -> jnp.ndarray:
+    return jax.vmap(lambda rr: intt(
+        rr, t["ipsi_rev"], t["ipsi_rev_shoup"], t["n_inv"],
+        t["n_inv_shoup"], t["primes"], modified=modified))(r)
+
+
+def _icrt_b(r: jnp.ndarray, t: Dict, tabs: IcrtTables, out_limbs: int,
+            strategy: str) -> jnp.ndarray:
+    return jax.vmap(lambda rr: icrt(
+        rr, tabs, t["primes"], t["inv_P"], t["inv_P_shoup"], t["pdivp"],
+        t["P_limbs"], t["P_half_limbs"], t["p_inv_f64"],
+        out_limbs=out_limbs, strategy=strategy))(r)
+
+
+def _mont_mul_b(a: jnp.ndarray, b: jnp.ndarray, t: Dict) -> jnp.ndarray:
+    return mont_modmul(a, b, t["primes"][:, None], t["pprime"][:, None],
+                       t["r2"][:, None])
+
+
+# --------------------------------------------------------------------------
+# the step
+# --------------------------------------------------------------------------
+
+def make_he_mul_step(st: HEStatic, mesh: Mesh, *,
+                     crt_strategy: str = "matmul",
+                     icrt_strategy: str = "matmul",
+                     modified_shoup: bool = False,
+                     reduce_scatter_icrt: bool = False):
+    """Build step(t1, t2, ek, ax1, bx1, ax2, bx2) -> (ax3, bx3).
+
+    Operands are (B, N, qlimbs) limb batches; outputs likewise. Strategy
+    knobs select the paper's optimization ladder per stage (benchmarks/
+    hillclimb.py sweeps them); `reduce_scatter_icrt` additionally shards
+    the post-iCRT limb axis on "model" so the partitioner can lower the
+    cross-prime reduction as reduce-scatter instead of all-reduce.
+    """
+    params, logq, qlimbs = st.params, st.logq, st.qlimbs
+    np2, ks_limbs = st.np2, st.ks_limbs
+    batch_axes = data_axes(mesh)
+    b_ax = batch_axes if batch_axes else None
+    ev_sh = he_eval_sharding(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    limb_sh = NamedSharding(
+        mesh, P(b_ax, None, model if reduce_scatter_icrt else None))
+    out_sh = NamedSharding(mesh, P(b_ax))
+
+    def ev(x):
+        return jax.lax.with_sharding_constraint(x, ev_sh)
+
+    def limbs(x):
+        return jax.lax.with_sharding_constraint(x, limb_sh)
+
+    def to_eval(x, t):
+        return ev(_ntt_b(ev(_crt_b(x, t, crt_strategy)), t, modified_shoup))
+
+    def from_eval(e, t, tabs, out_limbs):
+        res = _intt_b(e, t, modified_shoup)
+        return limbs(_icrt_b(ev(res), t, tabs, out_limbs, icrt_strategy))
+
+    def step(t1, t2, ek, ax1, bx1, ax2, bx2):
+        p1 = t1["primes"][:, None]
+        # ---- region 1: 4×(CRT→NTT), 3 pointwise, 3×(iNTT→iCRT) ----------
+        ea1 = to_eval(ax1, t1)
+        eb1 = to_eval(bx1, t1)
+        ea2 = to_eval(ax2, t1)
+        eb2 = to_eval(bx2, t1)
+
+        d0_ev = _mont_mul_b(eb1, eb2, t1)
+        d2_ev = _mont_mul_b(ea1, ea2, t1)
+        d1_ev = _mont_mul_b(modadd(ea1, eb1, p1), modadd(ea2, eb2, p1), t1)
+        d1_ev = modsub(modsub(d1_ev, d0_ev, p1), d2_ev, p1)
+
+        d0 = from_eval(d0_ev, t1, st.icrt1, qlimbs)
+        d1 = from_eval(d1_ev, t1, st.icrt1, qlimbs)
+        d2 = bigint.mask_bits(from_eval(d2_ev, t1, st.icrt1, qlimbs), logq)
+
+        # ---- region 2: key switching against the evk --------------------
+        e2 = to_eval(d2, t2)
+        p2 = t2["primes"]
+        ks_ax = from_eval(
+            pointwise_shoup_scale(e2, ek["ax_ev"][:np2],
+                                  ek["ax_ev_shoup"][:np2], p2,
+                                  modified=modified_shoup),
+            t2, st.icrt2, ks_limbs)
+        ks_bx = from_eval(
+            pointwise_shoup_scale(e2, ek["bx_ev"][:np2],
+                                  ek["bx_ev_shoup"][:np2], p2,
+                                  modified=modified_shoup),
+            t2, st.icrt2, ks_limbs)
+        ks_ax = bigint.shift_right_round(ks_ax, params.logQ,
+                                         out_limbs=qlimbs)
+        ks_bx = bigint.shift_right_round(ks_bx, params.logQ,
+                                         out_limbs=qlimbs)
+
+        # ---- combine ----------------------------------------------------
+        ax3 = bigint.mask_bits(bigint.add(d1, ks_ax), logq)
+        bx3 = bigint.mask_bits(bigint.add(d0, ks_bx), logq)
+        return (jax.lax.with_sharding_constraint(ax3, out_sh),
+                jax.lax.with_sharding_constraint(bx3, out_sh))
+
+    return step

@@ -1,0 +1,201 @@
+"""NamedSharding rule engines for every distributed surface of the repo.
+
+All rules are *placement hints*: they never change values, only where XLA
+puts them, so every sharded computation stays bitwise identical to its
+single-device reference (integer limb arithmetic partitions exactly; the
+one f64 quotient estimate in iCRT is followed by exact ±1 corrections).
+
+Axis convention (DESIGN.md §5, mirrors the paper's §V thread mapping):
+  - "data":  batches — ciphertext pairs per HE-Mul step, LM examples.
+  - "model": the np CRT primes of the HE pipeline (HEAX's per-modulus
+             lanes), and tensor-parallel dims of LM weights.
+  - "pod":   optional outer data axis on multi-pod meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch axes of a mesh: ("pod", "data") on multi-pod, else ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+# --------------------------------------------------------------------------
+# HE pipeline placements
+# --------------------------------------------------------------------------
+
+def he_limb_sharding(mesh: Mesh, batch: Optional[int] = None
+                     ) -> NamedSharding:
+    """Placement for batched ciphertext limb arrays (B, N, qlimbs).
+
+    The batch goes on the data axes; N and the limb axis stay local — the
+    pipeline re-shards its eval-domain intermediates (B, np, N) with np on
+    "model" internally. When `batch` is given and does not divide across
+    the data axes, falls back to replicated (correct, just not scaled).
+    """
+    axes = data_axes(mesh)
+    if not axes:
+        return NamedSharding(mesh, P())
+    if batch is not None and batch % _axis_size(mesh, axes) != 0:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(axes))
+
+
+def he_eval_sharding(mesh: Mesh) -> NamedSharding:
+    """Placement for eval-domain residue tensors (B, np, N): batch on the
+    data axes, the CRT primes on "model" (the paper's prime-per-thread
+    pinning, §V-A)."""
+    axes = data_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    return NamedSharding(mesh, P(axes if axes else None, model))
+
+
+def batch_spec(mesh: Mesh) -> NamedSharding:
+    """LM batch placement: leading (batch) dim over the data axes."""
+    axes = data_axes(mesh)
+    return NamedSharding(mesh, P(axes if axes else None))
+
+
+# --------------------------------------------------------------------------
+# LM parameter / cache / optimizer placements
+# --------------------------------------------------------------------------
+
+# Leaf or parent names whose weights are column-parallel (output dim on
+# "model") vs row-parallel (input dim on "model", megatron-style so the
+# matmul pair needs one collective, not two).
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "wi", "wg", "in_proj", "in_x", "in_y", "x_proj",
+    "dt_proj", "gate_a", "gate_x", "router", "lm_head",
+})
+_ROW_PARALLEL = frozenset({"wo", "out_proj", "out"})
+_EMBED = frozenset({"tok_embed"})
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def _model_dim(names: list, shape: Tuple[int, ...]) -> Optional[int]:
+    """Which dim of this leaf carries the tensor-parallel "model" axis."""
+    if len(shape) < 2:
+        return None
+    tagged = [n for n in names if n in _COL_PARALLEL | _ROW_PARALLEL
+              | _EMBED]
+    if tagged:
+        tag = tagged[-1]
+        if tag in _ROW_PARALLEL:
+            return len(shape) - 2
+        if tag in _EMBED:
+            return len(shape) - 2      # vocab dim of (V, D)
+        return len(shape) - 1          # column-parallel: output dim
+    # Unknown ≥2-d leaf (conv filters, SSM A_log, ...): largest dim.
+    return max(range(len(shape)), key=lambda d: shape[d])
+
+
+def param_sharding_rules(params: Any, mesh: Mesh, *,
+                         fsdp_params: bool = True) -> Any:
+    """Pytree of NamedShardings for model params.
+
+    Tensor-parallel dim (by name orientation, falling back to largest-dim)
+    goes on "model"; with `fsdp_params`, the largest remaining divisible
+    dim goes on "data" (FSDP). Scalars, vectors, and non-divisible dims
+    stay replicated — placement never fails, it only degrades.
+    """
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2:
+            md = _model_dim(_path_names(path), shape)
+            if md is not None and shape[md] % msize == 0 \
+                    and shape[md] >= msize and shape[md] > 1:
+                spec[md] = "model"
+            if fsdp_params:
+                free = [d for d in range(len(shape)) if spec[d] is None
+                        and shape[d] % dsize == 0 and shape[d] >= dsize
+                        and shape[d] > 1]
+                if free:
+                    spec[max(free, key=lambda d: shape[d])] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def cache_sharding_rules(cache: Any, mesh: Mesh) -> Any:
+    """Pytree of NamedShardings for KV / recurrent decode caches.
+
+    The batch dim (0, or 1 under a stacked/scanned layer axis) goes on
+    "data"; of the remaining dims, prefer the head dim (-2) and otherwise
+    the largest divisible dim for "model".
+    """
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        names = _path_names(path)
+        spec: list = [None] * len(shape)
+        bdim = 1 if names and names[0] in ("stacked", "groups") else 0
+        if len(shape) > bdim and shape[bdim] % dsize == 0 \
+                and shape[bdim] >= dsize and shape[bdim] > 1:
+            spec[bdim] = "data"
+        cands = [d for d in range(bdim + 1, len(shape))
+                 if spec[d] is None and shape[d] % msize == 0
+                 and shape[d] >= msize and shape[d] > 1]
+        if cands:
+            head = len(shape) - 2
+            spec[head if head in cands else
+                 max(cands, key=lambda d: shape[d])] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def zero1_opt_sharding(p_sh: Any, params: Any, mesh: Mesh) -> Any:
+    """ZeRO-1 moment placement: params' sharding plus the "data" axis on
+    the largest still-unsharded divisible dim (optimizer state is never
+    needed unsharded, so moments can always be FSDP'd even when params
+    are kept gathered for compute)."""
+    dsize = mesh.shape.get("data", 1)
+
+    def rule(sh, leaf):
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        used = {a for s in spec if s is not None
+                for a in ((s,) if isinstance(s, str) else s)}
+        if "data" not in used:
+            free = [d for d in range(leaf.ndim) if spec[d] is None
+                    and leaf.shape[d] % dsize == 0 and leaf.shape[d] >= dsize
+                    and leaf.shape[d] > 1]
+            if free:
+                spec[max(free, key=lambda d: leaf.shape[d])] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(rule, p_sh, params)

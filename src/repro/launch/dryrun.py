@@ -22,8 +22,8 @@ memory where the backend reports it, and wall compile time.
 """
 
 import argparse
+import contextlib
 import json
-import re
 import sys
 import time
 import traceback
@@ -37,116 +37,16 @@ from repro.data import make_batch_specs
 from repro.dist.sharding import (
     batch_spec, cache_sharding_rules, param_sharding_rules,
 )
+# re-exports: the parsers live in hlo_analysis (no import side effects);
+# hillclimb and older callers still reach them through this module.
+from repro.launch.hlo_analysis import (  # noqa: F401
+    analyze_compiled as _analyze, collective_bytes_from_hlo,
+)
 from repro.launch.mesh import make_production_mesh
 from repro.models import (
     decode_step, forward_train, init_cache, init_params, loss_fn, prefill,
 )
 from repro.optim import adamw_init, adamw_update, warmup_cosine
-
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-
-def _base_collective(op: str):
-    for suf in ("-start", "-done"):
-        if op.endswith(suf):
-            return op[: -len(suf)], suf
-    return op, ""
-
-
-def _group_size(line: str) -> int:
-    """Participants per replica group (ring size) for a collective line."""
-    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
-    if m:
-        return len(m.group(1).split(","))
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
-    if m:
-        return int(m.group(2))
-    return 1
-
-
-def collective_bytes_from_hlo(hlo_text: str) -> dict:
-    """Per-device ICI wire bytes of every collective in the partitioned HLO.
-
-    Modern HLO text omits operand shapes, so bytes derive from the OUTPUT
-    shape + replica-group size g with the standard ring model:
-      all-reduce       2·S·(g-1)/g        (reduce-scatter + all-gather)
-      all-gather       S_out·(g-1)/g
-      reduce-scatter   S_out·(g-1)        (input = S_out·g)
-      all-to-all       S·(g-1)/g
-      collective-permute S
-    This refines the assignment's "sum operand sizes" into the actual
-    per-device traffic each op puts on the links.
-    """
-    out = {k: 0.0 for k in _COLLECTIVES}
-    counts = {k: 0 for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        stripped = line.strip()
-        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([a-z0-9\-]+)\(", stripped)
-        if not m:
-            continue
-        op = m.group(2)
-        base, suf = _base_collective(op)
-        if base not in _COLLECTIVES or suf == "-done":
-            continue
-        shapes = _SHAPE_RE.findall(m.group(1))      # output shape(s)
-        size = 0
-        for dt, dims in shapes:
-            if dt not in _DTYPE_BYTES:
-                continue
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            size += n * _DTYPE_BYTES[dt]
-        g = _group_size(stripped)
-        if base == "collective-permute":             # point-to-point
-            wire = float(size)
-        elif g <= 1:
-            wire = 0.0
-        elif base == "all-reduce":
-            wire = 2.0 * size * (g - 1) / g
-        elif base == "all-gather":
-            wire = size * (g - 1) / g
-        elif base == "reduce-scatter":
-            wire = float(size) * (g - 1)
-        elif base == "all-to-all":
-            wire = size * (g - 1) / g
-        else:
-            wire = float(size)
-        counts[base] += 1
-        out[base] += wire
-    return {"bytes": out, "counts": counts,
-            "total_bytes": sum(out.values())}
-
-
-def _analyze(lowered, compiled, seconds: float) -> dict:
-    cost = compiled.cost_analysis() or {}
-    try:
-        mem = compiled.memory_analysis()
-        mem_d = {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
-        }
-    except Exception:
-        mem_d = {}
-    coll = collective_bytes_from_hlo(compiled.as_text())
-    return {
-        "flops": cost.get("flops"),
-        "bytes_accessed": cost.get("bytes accessed"),
-        "transcendentals": cost.get("transcendentals"),
-        "memory": mem_d,
-        "collectives": coll,
-        "compile_seconds": round(seconds, 2),
-    }
 
 
 # --------------------------------------------------------------------------
@@ -217,8 +117,34 @@ def lower_lm_cell(arch: str, shape_name: str, mesh, *,
     return out
 
 
+@contextlib.contextmanager
+def _x64_disabled():
+    """LM cells lower with 32-bit index types.
+
+    repro.core enables x64 globally for the HE limb pipeline (f64 iCRT
+    quotients, u64 limbs), but s64 scan indices trip an XLA SPMD
+    partitioner bug (s64/s32 compare in the scan-transpose
+    dynamic-update-slice) when the scanned params are sharded. The LM
+    model code is dtype-explicit, so 32-bit tracing is value-identical.
+    """
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
 def _lower_lm_variant(cfg, shape_name: str, mesh, opt_dtype=None,
                       sharding_mode: str = "fsdp") -> dict:
+    with _x64_disabled():
+        return _lower_lm_variant_inner(cfg, shape_name, mesh,
+                                       opt_dtype=opt_dtype,
+                                       sharding_mode=sharding_mode)
+
+
+def _lower_lm_variant_inner(cfg, shape_name: str, mesh, opt_dtype=None,
+                            sharding_mode: str = "fsdp") -> dict:
     kind, seq_len, global_batch = SHAPES[shape_name]
     params_abs = _abstract_params(cfg)
     p_sh = param_sharding_rules(params_abs, mesh,
@@ -240,8 +166,6 @@ def _lower_lm_variant(cfg, shape_name: str, mesh, opt_dtype=None,
         init_opt = _ft.partial(adamw_init, moments_dtype=opt_dtype) \
             if opt_dtype is not None else adamw_init
         opt_abs = jax.eval_shape(init_opt, params_abs)
-        opt_sh = jax.tree.map(
-            lambda a: p_sh_for_opt(a, p_sh, mesh), opt_abs)
         # moments shard like params (fsdp) or data-upgraded (zero1)
         from repro.dist.sharding import zero1_opt_sharding
         from repro.optim.adamw import OptState
@@ -288,11 +212,6 @@ def _lower_lm_variant(cfg, shape_name: str, mesh, opt_dtype=None,
 
     compiled = lowered.compile()
     return _analyze(lowered, compiled, time.time() - t0)
-
-
-def p_sh_for_opt(a, p_sh, mesh):  # pragma: no cover - unused fallback
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    return NamedSharding(mesh, P())
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,121 @@
+"""Side-effect-free HLO analysis helpers (no jax import, no env mutation).
+
+`launch.dryrun` sets XLA_FLAGS for 512 placeholder devices at module
+import, which poisons any process that merely wants the HLO parsers —
+so those parsers live here and dryrun re-exports them. Import this
+module from tests and benchmarks, never dryrun.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["collective_bytes_from_hlo", "analyze_compiled"]
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _base_collective(op: str):
+    for suf in ("-start", "-done"):
+        if op.endswith(suf):
+            return op[: -len(suf)], suf
+    return op, ""
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group (ring size) for a collective line."""
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device ICI wire bytes of every collective in the partitioned HLO.
+
+    Modern HLO text omits operand shapes, so bytes derive from the OUTPUT
+    shape + replica-group size g with the standard ring model:
+      all-reduce       2·S·(g-1)/g        (reduce-scatter + all-gather)
+      all-gather       S_out·(g-1)/g
+      reduce-scatter   S_out·(g-1)        (input = S_out·g)
+      all-to-all       S·(g-1)/g
+      collective-permute S
+    This refines the assignment's "sum operand sizes" into the actual
+    per-device traffic each op puts on the links.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([a-z0-9\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        base, suf = _base_collective(op)
+        if base not in _COLLECTIVES or suf == "-done":
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))      # output shape(s)
+        size = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            size += n * _DTYPE_BYTES[dt]
+        g = _group_size(stripped)
+        if base == "collective-permute":             # point-to-point
+            wire = float(size)
+        elif g <= 1:
+            wire = 0.0
+        elif base == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif base == "all-gather":
+            wire = size * (g - 1) / g
+        elif base == "reduce-scatter":
+            wire = float(size) * (g - 1)
+        elif base == "all-to-all":
+            wire = size * (g - 1) / g
+        else:
+            wire = float(size)
+        counts[base] += 1
+        out[base] += wire
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def analyze_compiled(lowered, compiled, seconds: float) -> dict:
+    """Cost/memory/collective record for one compiled cell."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):    # some jax versions: one per program
+        cost = cost[0] if cost else {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "transcendentals": cost.get("transcendentals"),
+        "memory": mem_d,
+        "collectives": coll,
+        "compile_seconds": round(seconds, 2),
+    }

@@ -27,5 +27,8 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh(*, model: int = 1) -> jax.sharding.Mesh:
     """Whatever this host offers (tests / examples on CPU)."""
     n = len(jax.devices())
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"model={model} must divide the host device count ({n})")
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"))

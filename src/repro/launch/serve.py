@@ -1,7 +1,13 @@
-"""Serving driver: batched prefill + greedy decode.
+"""Serving drivers: batched LM prefill + greedy decode, and the paper's
+own workload — batched HE Mul — over the mesh-sharded pipeline.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --preset smoke --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --he --batch 8
+
+Both paths place their state with repro.dist.sharding rules on the host
+mesh (whatever devices this process has), so the same driver scales from
+1 CPU device to a pod slice unchanged.
 """
 
 from __future__ import annotations
@@ -35,6 +41,65 @@ def generate(params, cfg: ModelConfig, tokens, gen_steps: int,
     return jnp.concatenate(out, axis=1)
 
 
+def serve_he(batch: int, steps: int = 3, model_shards: int = 1) -> dict:
+    """Batched HE-Mul serving over the mesh-sharded pipeline.
+
+    Encrypts `batch` ciphertext pairs, places them with he_limb_sharding
+    on the host mesh, runs the jit'd make_he_mul_step, and checks the
+    decrypted products. Returns a stats dict (printed by main).
+    """
+    from repro.configs.heaan_mul import SMOKE
+    from repro.core import heaan as H
+    from repro.core.context import make_context
+    from repro.core.keys import keygen
+    from repro.dist import he_pipeline as hp
+    from repro.dist.sharding import he_limb_sharding
+    from repro.launch.mesh import make_host_mesh
+
+    params = SMOKE
+    sk, pk, evk = keygen(params, seed=0)
+    mesh = make_host_mesh(model=model_shards)   # validates divisibility
+    rng = np.random.default_rng(0)
+    n = params.n_slots_max
+    zs = [(rng.normal(size=n) + 1j * rng.normal(size=n),
+           rng.normal(size=n) + 1j * rng.normal(size=n))
+          for _ in range(batch)]
+    cts = [(H.encrypt_message(z1, pk, params, seed=2 * i + 1),
+            H.encrypt_message(z2, pk, params, seed=2 * i + 2))
+           for i, (z1, z2) in enumerate(zs)]
+
+    st = hp.he_static(params, params.logQ)
+    ctx = make_context(params, params.logQ)
+    t1, t2, ek = hp.runtime_tables(ctx, evk)
+    sh = he_limb_sharding(mesh, batch=batch)
+    ax1, bx1, ax2, bx2 = (
+        jax.device_put(jnp.stack([getattr(c[j], a) for c in cts]), sh)
+        for j, a in ((0, "ax"), (0, "bx"), (1, "ax"), (1, "bx")))
+    step = jax.jit(hp.make_he_mul_step(st, mesh))
+
+    t0 = time.time()
+    ax3, bx3 = jax.block_until_ready(step(t1, t2, ek, ax1, bx1, ax2, bx2))
+    compile_s = time.time() - t0
+    t0 = time.time()
+    for _ in range(steps):
+        ax3, bx3 = jax.block_until_ready(
+            step(t1, t2, ek, ax1, bx1, ax2, bx2))
+    steady_s = (time.time() - t0) / max(steps, 1)
+
+    from repro.core.cipher import Ciphertext
+    errs = []
+    for i, (z1, z2) in enumerate(zs):
+        ct3 = Ciphertext(ax=ax3[i], bx=bx3[i], logq=params.logQ,
+                         logp=2 * params.log_delta, n_slots=n)
+        out = H.decrypt_message(H.rescale(ct3, params), sk, params)
+        errs.append(float(np.abs(out - z1 * z2).max()))
+    return {"batch": batch, "devices": len(jax.devices()),
+            "mesh": dict(mesh.shape), "compile_s": round(compile_s, 3),
+            "steady_s_per_step": round(steady_s, 4),
+            "mul_per_s": round(batch / max(steady_s, 1e-9), 1),
+            "max_err": max(errs)}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -42,17 +107,40 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--he", action="store_true",
+                    help="serve batched HE Mul instead of an LM")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="size of the model axis of the host mesh")
     args = ap.parse_args()
 
+    if args.he:
+        stats = serve_he(args.batch, model_shards=args.model_shards)
+        print(f"he_mul batch={stats['batch']} on {stats['devices']} "
+              f"device(s) {stats['mesh']}: {stats['mul_per_s']} mul/s "
+              f"(compile {stats['compile_s']}s, "
+              f"step {stats['steady_s_per_step']}s, "
+              f"max_err {stats['max_err']:.2e})")
+        assert stats["max_err"] < 1e-2, "HE serving pipeline diverged"
+        return
+
     from repro.configs.registry import get_arch
+    from repro.dist.sharding import batch_spec, param_sharding_rules
+    from repro.launch.mesh import make_host_mesh
     cfg = get_arch(args.arch)
     if args.preset == "smoke":
         cfg = cfg.reduced()
+    mesh = make_host_mesh(model=args.model_shards)  # validates divisibility
     rng = np.random.default_rng(0)
     params = init_params(cfg, jax.random.key(0))
+    # tensor-parallel only: FSDP-sharded weights would re-gather on every
+    # decode step, and serving has no gradients to shard for
+    params = jax.device_put(
+        params, param_sharding_rules(params, mesh, fsdp_params=False))
     tokens = jnp.asarray(
         rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
         jnp.int32)
+    if args.batch % mesh.shape["data"] == 0:
+        tokens = jax.device_put(tokens, batch_spec(mesh))
     extra = {}
     if cfg.enc_dec:
         extra["frames"] = jnp.asarray(rng.normal(

@@ -63,11 +63,7 @@ def test_he_pipeline_matches_core_on_mesh():
         st = hp.he_static(params, params.logQ)
         step = jax.jit(hp.make_he_mul_step(st, mesh))
         ctx = make_context(params, params.logQ)
-        t1 = {k: jnp.asarray(v) for k, v in
-              hp.region_tables(ctx, 1).items()}
-        t2 = {k: jnp.asarray(v) for k, v in
-              hp.region_tables(ctx, 2).items()}
-        ek = {k: jnp.asarray(v) for k, v in hp.evk_tables(evk).items()}
+        t1, t2, ek = hp.runtime_tables(ctx, evk)
         stack = lambda xs: jnp.stack(xs)
         sh = he_limb_sharding(mesh)
         ax1 = jax.device_put(stack([cts[2*i].ax for i in range(B)]), sh)

@@ -1,7 +1,11 @@
-"""Dry-run analysis plumbing: HLO collective parser + roofline math."""
+"""Dry-run analysis plumbing: HLO collective parser + roofline math.
+
+Imports repro.launch.hlo_analysis (NOT dryrun, whose import sets XLA_FLAGS
+for 512 placeholder devices — a side effect no test process wants).
+"""
 
 import repro.core  # noqa: F401
-from repro.launch.dryrun import collective_bytes_from_hlo
+from repro.launch.hlo_analysis import collective_bytes_from_hlo
 from benchmarks.roofline import analyze_record, model_flops
 
 

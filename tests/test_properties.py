@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import test_params as small_params
 from repro.core import make_context

@@ -6,6 +6,7 @@ composition the examples ship.
 """
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +45,7 @@ def test_he_scheme_end_to_end():
     assert np.abs(out - (z1 * z2 + z1)).max() < 1e-2
 
 
+@pytest.mark.slow
 def test_plain_ops_compose_with_he_mul():
     """he_mul_plain ∘ he_mul chain (the encrypted-inference building block)."""
     params = small_params(logN=5, beta_bits=32, logQ=144, logp=24)
@@ -60,6 +62,7 @@ def test_plain_ops_compose_with_he_mul():
     np.testing.assert_allclose(out, (0.5 * z) ** 2, atol=1e-2)
 
 
+@pytest.mark.slow
 def test_train_then_serve_cycle(tmp_path):
     cfg = get_arch("llama3.2-1b").reduced(n_layers=2, d_model=64,
                                           n_heads=2, n_kv_heads=2,
