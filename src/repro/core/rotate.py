@@ -25,8 +25,8 @@ from repro.core.context import build_global_tables, make_context, _shoup_vec
 from repro.core.params import HEParams
 from repro.core.rns import DEFAULT, PipelineConfig
 
-__all__ = ["rot_keygen", "he_rotate", "he_conjugate", "automorphism_poly",
-           "rotation_k"]
+__all__ = ["rot_keygen", "conj_keygen", "he_rotate", "he_conjugate",
+           "automorphism_poly", "automorphism_maps", "rotation_k"]
 
 
 def rotation_k(params: HEParams, r: int) -> int:
@@ -40,6 +40,16 @@ def _auto_maps(N: int, k: int):
     idx = (np.arange(N, dtype=np.int64) * k) % (2 * N)
     neg = idx >= N
     return idx % N, neg
+
+
+def automorphism_maps(N: int, k: int):
+    """Host-side σ_k coefficient maps: (dest indices, negate mask).
+
+    Public so batched engines (repro.hserve) can bake the permutation
+    into a traced step; each rotation key-switches with the SAME region-2
+    machinery as HE Mul, so the maps are the only rotate-specific state.
+    """
+    return _auto_maps(N, k)
 
 
 def automorphism_poly(poly: jnp.ndarray, params: HEParams, k: int,

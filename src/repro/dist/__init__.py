@@ -10,7 +10,11 @@ Modules:
   - sharding:    NamedSharding rule engines for HE limb tensors, LM params,
                  KV caches, batches, and ZeRO-1 optimizer state.
   - he_pipeline: the paper's Fig. 2 two-region HE Mul as a single jit-able,
-                 mesh-sharded step, bitwise identical to core.heaan.he_mul.
+                 mesh-sharded step, bitwise identical to core.heaan.he_mul;
+                 its batched stages are factored as make_stage_fns /
+                 make_keyswitch_step (reused by repro.hserve's rotate and
+                 slot-sum engine) and route through the repro.kernels
+                 Pallas paths with use_kernels=True.
   - collectives: int8 compress -> all-gather -> decompress gradient
                  reduction (composes with optim.compress).
 """

@@ -18,12 +18,20 @@ ntt, mont pointwise, intt, icrt, BigInt combine) in the same order as
 constraints — integer limb arithmetic partitions exactly, and iCRT's f64
 quotient estimate is followed by exact ±1 corrections — so the sharded
 output equals the single-device reference bit for bit (tests/test_dist.py).
+
+The batched stage wrappers are factored into a :class:`StageFns` bundle
+(``make_stage_fns``) plus a region-2 key-switch factory
+(``make_keyswitch_step``) so `repro.hserve.engine` can lift Galois
+rotations and slot-sum reductions onto the same table pytrees — and every
+stage can route through the repro.kernels Pallas paths (``use_kernels``;
+the kernels are exact integer drop-ins, so the bitwise contract holds on
+either path).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +52,7 @@ from repro.dist.sharding import data_axes, he_eval_sharding
 __all__ = [
     "HEStatic", "he_static", "region_tables", "evk_tables",
     "runtime_tables", "he_table_specs", "he_input_specs",
+    "StageFns", "make_stage_fns", "make_keyswitch_step",
     "make_he_mul_step",
 ]
 
@@ -52,6 +61,7 @@ REGION_TABLE_KEYS = (
     "primes", "psi_rev", "psi_rev_shoup", "ipsi_rev", "ipsi_rev_shoup",
     "n_inv", "n_inv_shoup", "pprime", "r2", "crt_tb", "crt_tb_shoup",
     "inv_P", "inv_P_shoup", "pdivp", "P_limbs", "P_half_limbs", "p_inv_f64",
+    "quot_fix",
 )
 
 EVK_TABLE_KEYS = ("ax_ev", "ax_ev_shoup", "bx_ev", "bx_ev_shoup")
@@ -130,6 +140,7 @@ def region_tables(ctx: HEContext, region: int) -> Dict[str, np.ndarray]:
         "P_limbs": tabs.P_limbs,
         "P_half_limbs": tabs.P_half_limbs,
         "p_inv_f64": g.p_inv_f64[:npn],
+        "quot_fix": tabs.quot_fix,
     }
 
 
@@ -175,6 +186,7 @@ def _region_spec(st: HEStatic, npn: int, tabs: IcrtTables) -> Dict:
         "P_limbs": sds((tabs.accum_limbs,), dt),
         "P_half_limbs": sds((tabs.accum_limbs,), dt),
         "p_inv_f64": sds((npn,), np.float64),
+        "quot_fix": sds((npn, 2), dt),
     }
 
 
@@ -197,60 +209,139 @@ def he_input_specs(st: HEStatic, batch: int) -> Tuple:
 # --------------------------------------------------------------------------
 # batched stage wrappers (value-identical to the per-item core stages)
 # --------------------------------------------------------------------------
+#
+# Pallas routing folds the batch into whichever axis the kernel treats as
+# independent rows: CRT/iCRT/pointwise are per-coefficient (batch folds
+# into N), NTT/iNTT butterflies mix across N but rows are per-prime (batch
+# tiles the row axis, twiddles riding along). All kernels are exact
+# integer drop-ins (tests/test_kernels.py), so either path is bitwise
+# identical to the core stages.
 
-def _crt_b(x: jnp.ndarray, t: Dict, strategy: str) -> jnp.ndarray:
+def _fold_np(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, np, N) -> (np, B·N): concatenate the batch into the coefficient
+    axis (legal wherever the op is per-coefficient)."""
+    B, npn, N = x.shape
+    return jnp.moveaxis(x, 1, 0).reshape(npn, B * N)
+
+
+def _unfold_np(x: jnp.ndarray, B: int) -> jnp.ndarray:
+    npn = x.shape[0]
+    return jnp.moveaxis(x.reshape(npn, B, -1), 0, 1)
+
+
+def _crt_b(x: jnp.ndarray, t: Dict, strategy: str,
+           use_kernels: bool = False) -> jnp.ndarray:
     """(B, N, K) limbs -> (B, np, N) residues. CRT rows are independent
     per coefficient, so batching folds into the row dimension exactly."""
     B, N, K = x.shape
-    res = crt(x.reshape(B * N, K), t["crt_tb"], t["crt_tb_shoup"],
-              t["primes"], strategy=strategy)
+    if use_kernels:
+        from repro.kernels.crt.ops import crt_op
+        kstrat = strategy if strategy in ("acc3", "mod2", "mod4") else "acc3"
+        res = crt_op(x.reshape(B * N, K), t["crt_tb"], t["crt_tb_shoup"],
+                     t["primes"], strategy=kstrat)
+    else:
+        res = crt(x.reshape(B * N, K), t["crt_tb"], t["crt_tb_shoup"],
+                  t["primes"], strategy=strategy)
     return jnp.moveaxis(res.reshape(res.shape[0], B, N), 0, 1)
 
 
-def _ntt_b(r: jnp.ndarray, t: Dict, modified: bool) -> jnp.ndarray:
+def _ntt_b(r: jnp.ndarray, t: Dict, modified: bool,
+           use_kernels: bool = False) -> jnp.ndarray:
+    if use_kernels:
+        from repro.kernels.ntt.ops import ntt_op
+        B, npn, N = r.shape
+        return ntt_op(r.reshape(B * npn, N),
+                      jnp.tile(t["psi_rev"], (B, 1)),
+                      jnp.tile(t["psi_rev_shoup"], (B, 1)),
+                      jnp.tile(t["primes"], B),
+                      modified=modified).reshape(B, npn, N)
     return jax.vmap(lambda rr: ntt(
         rr, t["psi_rev"], t["psi_rev_shoup"], t["primes"],
         modified=modified))(r)
 
 
-def _intt_b(r: jnp.ndarray, t: Dict, modified: bool) -> jnp.ndarray:
+def _intt_b(r: jnp.ndarray, t: Dict, modified: bool,
+            use_kernels: bool = False) -> jnp.ndarray:
+    if use_kernels:
+        from repro.kernels.ntt.ops import intt_op
+        B, npn, N = r.shape
+        return intt_op(r.reshape(B * npn, N),
+                       jnp.tile(t["ipsi_rev"], (B, 1)),
+                       jnp.tile(t["ipsi_rev_shoup"], (B, 1)),
+                       jnp.tile(t["n_inv"], B),
+                       jnp.tile(t["n_inv_shoup"], B),
+                       jnp.tile(t["primes"], B),
+                       modified=modified).reshape(B, npn, N)
     return jax.vmap(lambda rr: intt(
         rr, t["ipsi_rev"], t["ipsi_rev_shoup"], t["n_inv"],
         t["n_inv_shoup"], t["primes"], modified=modified))(r)
 
 
 def _icrt_b(r: jnp.ndarray, t: Dict, tabs: IcrtTables, out_limbs: int,
-            strategy: str) -> jnp.ndarray:
+            strategy: str, use_kernels: bool = False) -> jnp.ndarray:
+    if use_kernels:
+        from repro.core.crt import finalize_accum
+        from repro.kernels.icrt.icrt import icrt_accum_pallas
+        B = r.shape[0]
+        accum, s = icrt_accum_pallas(
+            _fold_np(r), t["inv_P"], t["inv_P_shoup"], t["pdivp"],
+            t["quot_fix"], t["primes"], accum_limbs=tabs.accum_limbs)
+        out = finalize_accum(accum, s, t["P_limbs"], t["P_half_limbs"],
+                             out_limbs)
+        return out.reshape(B, -1, out_limbs)
     return jax.vmap(lambda rr: icrt(
         rr, tabs, t["primes"], t["inv_P"], t["inv_P_shoup"], t["pdivp"],
         t["P_limbs"], t["P_half_limbs"], t["p_inv_f64"],
         out_limbs=out_limbs, strategy=strategy))(r)
 
 
-def _mont_mul_b(a: jnp.ndarray, b: jnp.ndarray, t: Dict) -> jnp.ndarray:
+def _mont_mul_b(a: jnp.ndarray, b: jnp.ndarray, t: Dict,
+                use_kernels: bool = False) -> jnp.ndarray:
+    if use_kernels:
+        from repro.kernels.modmul.ops import pointwise_mont_op
+        B = a.shape[0]
+        return _unfold_np(pointwise_mont_op(
+            _fold_np(a), _fold_np(b), t["primes"], t["pprime"], t["r2"]), B)
     return mont_modmul(a, b, t["primes"][:, None], t["pprime"][:, None],
                        t["r2"][:, None])
 
 
 # --------------------------------------------------------------------------
-# the step
+# stage bundles and the steps built from them
 # --------------------------------------------------------------------------
 
-def make_he_mul_step(st: HEStatic, mesh: Mesh, *,
-                     crt_strategy: str = "matmul",
-                     icrt_strategy: str = "matmul",
-                     modified_shoup: bool = False,
-                     reduce_scatter_icrt: bool = False):
-    """Build step(t1, t2, ek, ax1, bx1, ax2, bx2) -> (ax3, bx3).
+@dataclasses.dataclass(frozen=True)
+class StageFns:
+    """Mesh-constrained batched stage bundle for one parameter level.
 
-    Operands are (B, N, qlimbs) limb batches; outputs likewise. Strategy
-    knobs select the paper's optimization ladder per stage (benchmarks/
-    hillclimb.py sweeps them); `reduce_scatter_icrt` additionally shards
-    the post-iCRT limb axis on "model" so the partitioner can lower the
-    cross-prime reduction as reduce-scatter instead of all-reduce.
+    `to_eval`/`from_eval` are the paper's CRT→NTT and iNTT→iCRT chains
+    over (B, ·, ·) batches with placement constraints applied between
+    stages; `mont_mul` is the region-1 pointwise product. Shared by
+    make_he_mul_step and the repro.hserve rotate/slot-sum engine.
     """
-    params, logq, qlimbs = st.params, st.logq, st.qlimbs
-    np2, ks_limbs = st.np2, st.ks_limbs
+
+    to_eval: Callable[[jnp.ndarray, Dict], jnp.ndarray]
+    from_eval: Callable[[jnp.ndarray, Dict, IcrtTables, int], jnp.ndarray]
+    mont_mul: Callable[[jnp.ndarray, jnp.ndarray, Dict], jnp.ndarray]
+    ev: Callable[[jnp.ndarray], jnp.ndarray]       # eval-domain placement
+    out: Callable[[jnp.ndarray], jnp.ndarray]      # output placement
+    modified_shoup: bool
+
+
+def make_stage_fns(st: HEStatic, mesh: Mesh, *,
+                   crt_strategy: str = "matmul",
+                   icrt_strategy: str = "matmul",
+                   modified_shoup: bool = False,
+                   reduce_scatter_icrt: bool = False,
+                   use_kernels: bool = False) -> StageFns:
+    """Bind strategy knobs + mesh placements into a reusable stage bundle.
+
+    `use_kernels` routes CRT/NTT/iNTT/iCRT/pointwise through the
+    repro.kernels Pallas paths (β = 2^32 only; interpret mode off-TPU).
+    """
+    if use_kernels:
+        assert st.params.beta_bits == 32, \
+            "Pallas kernels are β=2^32 (TPU-native)"
     batch_axes = data_axes(mesh)
     b_ax = batch_axes if batch_axes else None
     ev_sh = he_eval_sharding(mesh)
@@ -265,52 +356,105 @@ def make_he_mul_step(st: HEStatic, mesh: Mesh, *,
     def limbs(x):
         return jax.lax.with_sharding_constraint(x, limb_sh)
 
+    def out(x):
+        return jax.lax.with_sharding_constraint(x, out_sh)
+
     def to_eval(x, t):
-        return ev(_ntt_b(ev(_crt_b(x, t, crt_strategy)), t, modified_shoup))
+        return ev(_ntt_b(ev(_crt_b(x, t, crt_strategy, use_kernels)), t,
+                         modified_shoup, use_kernels))
 
     def from_eval(e, t, tabs, out_limbs):
-        res = _intt_b(e, t, modified_shoup)
-        return limbs(_icrt_b(ev(res), t, tabs, out_limbs, icrt_strategy))
+        res = _intt_b(e, t, modified_shoup, use_kernels)
+        return limbs(_icrt_b(ev(res), t, tabs, out_limbs, icrt_strategy,
+                             use_kernels))
+
+    def mont_mul(a, b, t):
+        return _mont_mul_b(a, b, t, use_kernels)
+
+    return StageFns(to_eval=to_eval, from_eval=from_eval,
+                    mont_mul=mont_mul, ev=ev, out=out,
+                    modified_shoup=modified_shoup)
+
+
+def make_keyswitch_step(st: HEStatic, sf: StageFns):
+    """Region-2 key switch: ks(t2, ek, d) -> (ks_ax, ks_bx) at qlimbs.
+
+    The shared tail of HE Mul (d = d2) and every Galois operation
+    (d = σ_k(ax)) — paper Fig. 2's region 2: CRT→NTT at np₂ primes,
+    two Shoup pointwise products against the (rotation/evaluation) key,
+    iNTT→iCRT at ks_limbs, then the ÷Q rounding shift.
+    """
+    np2, ks_limbs = st.np2, st.ks_limbs
+    logQ, qlimbs = st.params.logQ, st.qlimbs
+
+    def ks(t2, ek, d):
+        e2 = sf.to_eval(d, t2)
+        p2 = t2["primes"]
+        ks_ax = sf.from_eval(
+            pointwise_shoup_scale(e2, ek["ax_ev"][:np2],
+                                  ek["ax_ev_shoup"][:np2], p2,
+                                  modified=sf.modified_shoup),
+            t2, st.icrt2, ks_limbs)
+        ks_bx = sf.from_eval(
+            pointwise_shoup_scale(e2, ek["bx_ev"][:np2],
+                                  ek["bx_ev_shoup"][:np2], p2,
+                                  modified=sf.modified_shoup),
+            t2, st.icrt2, ks_limbs)
+        ks_ax = bigint.shift_right_round(ks_ax, logQ, out_limbs=qlimbs)
+        ks_bx = bigint.shift_right_round(ks_bx, logQ, out_limbs=qlimbs)
+        return ks_ax, ks_bx
+
+    return ks
+
+
+def make_he_mul_step(st: HEStatic, mesh: Mesh, *,
+                     crt_strategy: str = "matmul",
+                     icrt_strategy: str = "matmul",
+                     modified_shoup: bool = False,
+                     reduce_scatter_icrt: bool = False,
+                     use_kernels: bool = False):
+    """Build step(t1, t2, ek, ax1, bx1, ax2, bx2) -> (ax3, bx3).
+
+    Operands are (B, N, qlimbs) limb batches; outputs likewise. Strategy
+    knobs select the paper's optimization ladder per stage (benchmarks/
+    hillclimb.py sweeps them); `reduce_scatter_icrt` additionally shards
+    the post-iCRT limb axis on "model" so the partitioner can lower the
+    cross-prime reduction as reduce-scatter instead of all-reduce;
+    `use_kernels` routes every stage through the repro.kernels Pallas
+    paths (β = 2^32), keeping the bitwise contract.
+    """
+    logq, qlimbs = st.logq, st.qlimbs
+    sf = make_stage_fns(st, mesh, crt_strategy=crt_strategy,
+                        icrt_strategy=icrt_strategy,
+                        modified_shoup=modified_shoup,
+                        reduce_scatter_icrt=reduce_scatter_icrt,
+                        use_kernels=use_kernels)
+    keyswitch = make_keyswitch_step(st, sf)
 
     def step(t1, t2, ek, ax1, bx1, ax2, bx2):
         p1 = t1["primes"][:, None]
         # ---- region 1: 4×(CRT→NTT), 3 pointwise, 3×(iNTT→iCRT) ----------
-        ea1 = to_eval(ax1, t1)
-        eb1 = to_eval(bx1, t1)
-        ea2 = to_eval(ax2, t1)
-        eb2 = to_eval(bx2, t1)
+        ea1 = sf.to_eval(ax1, t1)
+        eb1 = sf.to_eval(bx1, t1)
+        ea2 = sf.to_eval(ax2, t1)
+        eb2 = sf.to_eval(bx2, t1)
 
-        d0_ev = _mont_mul_b(eb1, eb2, t1)
-        d2_ev = _mont_mul_b(ea1, ea2, t1)
-        d1_ev = _mont_mul_b(modadd(ea1, eb1, p1), modadd(ea2, eb2, p1), t1)
+        d0_ev = sf.mont_mul(eb1, eb2, t1)
+        d2_ev = sf.mont_mul(ea1, ea2, t1)
+        d1_ev = sf.mont_mul(modadd(ea1, eb1, p1), modadd(ea2, eb2, p1), t1)
         d1_ev = modsub(modsub(d1_ev, d0_ev, p1), d2_ev, p1)
 
-        d0 = from_eval(d0_ev, t1, st.icrt1, qlimbs)
-        d1 = from_eval(d1_ev, t1, st.icrt1, qlimbs)
-        d2 = bigint.mask_bits(from_eval(d2_ev, t1, st.icrt1, qlimbs), logq)
+        d0 = sf.from_eval(d0_ev, t1, st.icrt1, qlimbs)
+        d1 = sf.from_eval(d1_ev, t1, st.icrt1, qlimbs)
+        d2 = bigint.mask_bits(sf.from_eval(d2_ev, t1, st.icrt1, qlimbs),
+                              logq)
 
         # ---- region 2: key switching against the evk --------------------
-        e2 = to_eval(d2, t2)
-        p2 = t2["primes"]
-        ks_ax = from_eval(
-            pointwise_shoup_scale(e2, ek["ax_ev"][:np2],
-                                  ek["ax_ev_shoup"][:np2], p2,
-                                  modified=modified_shoup),
-            t2, st.icrt2, ks_limbs)
-        ks_bx = from_eval(
-            pointwise_shoup_scale(e2, ek["bx_ev"][:np2],
-                                  ek["bx_ev_shoup"][:np2], p2,
-                                  modified=modified_shoup),
-            t2, st.icrt2, ks_limbs)
-        ks_ax = bigint.shift_right_round(ks_ax, params.logQ,
-                                         out_limbs=qlimbs)
-        ks_bx = bigint.shift_right_round(ks_bx, params.logQ,
-                                         out_limbs=qlimbs)
+        ks_ax, ks_bx = keyswitch(t2, ek, d2)
 
         # ---- combine ----------------------------------------------------
         ax3 = bigint.mask_bits(bigint.add(d1, ks_ax), logq)
         bx3 = bigint.mask_bits(bigint.add(d0, ks_bx), logq)
-        return (jax.lax.with_sharding_constraint(ax3, out_sh),
-                jax.lax.with_sharding_constraint(bx3, out_sh))
+        return sf.out(ax3), sf.out(bx3)
 
     return step

@@ -1,0 +1,63 @@
+"""repro.hserve — batched HE serving runtime over the sharded pipeline.
+
+The paper's architectural claim (§V) is that HE-Mul *throughput* under
+thread-pinned batching — not single-op latency — is what makes HEAAN
+serviceable; HEAX's per-modulus lanes and Medha's resident-on-chip
+key/table placement both say the winning serving design keeps ONE table
+set resident and streams work through it. `repro.hserve` is that design
+in JAX/GSPMD, layered on `repro.dist.he_pipeline`:
+
+  - :mod:`repro.hserve.queue`   — request queue + batch assembler:
+    buckets by (op, level), pads to one fixed trace shape per bucket.
+  - :mod:`repro.hserve.tables`  — level-aware resident table cache:
+    tables materialize once at logQ; every level logq < logQ is served
+    as row-slices of the one resident pytree.
+  - :mod:`repro.hserve.engine`  — jit-once op engine: mesh-sharded
+    `he_mul`, `he_rotate`, and slot-sum steps, bitwise identical to the
+    single-device `core` references.
+  - :mod:`repro.hserve.metrics` — steady-state throughput / latency /
+    queue-depth accounting.
+  - :mod:`repro.hserve.server`  — :class:`HEServer`, the composed loop.
+
+Usage — serve a mixed multi-level stream on the host mesh::
+
+    from repro.core import heaan as H
+    from repro.core.keys import keygen
+    from repro.core.rotate import rot_keygen
+    from repro.core.params import test_params
+    from repro.hserve import HEServer
+
+    params = test_params(logN=5, beta_bits=32)
+    sk, pk, evk = keygen(params, seed=0)
+    server = HEServer(params, evk,
+                      rot_keys={1: rot_keygen(params, sk, 1)}, batch=4)
+
+    c1 = H.encrypt_message(z1, pk, params, seed=1)
+    c2 = H.encrypt_message(z2, pk, params, seed=2)
+    rid_mul = server.submit_mul(c1, c2)           # level logQ
+    low = H.he_mod_down(c1, params, params.logQ - params.logp)
+    rid_rot = server.submit_rotate(low, r=1)      # a lower level
+
+    results = server.drain()                      # {rid: Ciphertext}
+    print(server.stats()["per_op"]["mul"]["ops_per_s"])
+
+Or drive it from the CLI::
+
+    PYTHONPATH=src python -m repro.launch.serve --he --batch 8 \\
+        --requests 24 --levels 3 --rotations 4 [--kernels]
+"""
+
+from repro.hserve import engine, metrics, queue, tables  # noqa: F401
+from repro.hserve.engine import OpEngine, slot_sum_rotations  # noqa: F401
+from repro.hserve.metrics import ServeMetrics  # noqa: F401
+from repro.hserve.queue import (  # noqa: F401
+    Batch, BatchAssembler, Request, RequestQueue,
+)
+from repro.hserve.server import HEServer  # noqa: F401
+from repro.hserve.tables import TableCache  # noqa: F401
+
+__all__ = [
+    "HEServer", "OpEngine", "TableCache", "ServeMetrics",
+    "Request", "Batch", "RequestQueue", "BatchAssembler",
+    "slot_sum_rotations",
+]

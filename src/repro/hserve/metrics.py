@@ -1,0 +1,89 @@
+"""Steady-state serving accounting: throughput, latency, queue depth.
+
+The paper's premise (§V) is that HE Mul THROUGHPUT under batching — not
+single-op latency — is what makes HEAAN serviceable; this module gives
+the serving runtime the numbers to prove it per op kind:
+
+  - per-(op) throughput: valid (non-padding) ops per second of engine
+    wall time, compile excluded (steady state);
+  - request latency: submit → batch-complete, p50/p99;
+  - batch efficiency: padding fraction per op;
+  - queue depth samples over the run.
+
+Everything is plain host-side accumulation — no jax dependency — so the
+metrics can run on a frontend host next to the RequestQueue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["ServeMetrics"]
+
+
+@dataclasses.dataclass
+class _OpStats:
+    batches: int = 0
+    valid: int = 0
+    padded: int = 0
+    wall_s: float = 0.0
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+
+class ServeMetrics:
+    """Accumulate per-batch records; summarize steady-state rates."""
+
+    def __init__(self):
+        self._ops: Dict[str, _OpStats] = defaultdict(_OpStats)
+        self._depths: List[int] = []
+        self._levels: set = set()
+
+    def record_batch(self, op: str, logq: int, n_valid: int, n_pad: int,
+                     wall_s: float, latencies_s: List[float]) -> None:
+        s = self._ops[op]
+        s.batches += 1
+        s.valid += n_valid
+        s.padded += n_pad
+        s.wall_s += wall_s
+        s.latencies.extend(latencies_s)
+        self._levels.add(logq)
+
+    def record_depth(self, depth: int) -> None:
+        self._depths.append(depth)
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def summary(self) -> dict:
+        per_op = {}
+        for op, s in sorted(self._ops.items()):
+            served = s.valid + s.padded
+            per_op[op] = {
+                "batches": s.batches,
+                "requests": s.valid,
+                "ops_per_s": round(s.valid / s.wall_s, 3)
+                if s.wall_s > 0 else 0.0,
+                "wall_s": round(s.wall_s, 4),
+                "pad_frac": round(s.padded / served, 4) if served else 0.0,
+                "latency_ms": {
+                    "p50": round(1e3 * self._pct(s.latencies, 50), 3),
+                    "p99": round(1e3 * self._pct(s.latencies, 99), 3),
+                    "max": round(1e3 * max(s.latencies), 3)
+                    if s.latencies else 0.0,
+                },
+            }
+        return {
+            "per_op": per_op,
+            "levels_served": sorted(self._levels),
+            "queue_depth": {
+                "mean": round(float(np.mean(self._depths)), 2)
+                if self._depths else 0.0,
+                "max": int(max(self._depths)) if self._depths else 0,
+                "samples": len(self._depths),
+            },
+        }

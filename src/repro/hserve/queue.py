@@ -1,0 +1,197 @@
+"""Request queue and batch assembler for the HE serving runtime.
+
+The unit of work a privacy-preserving serving system schedules is a
+ciphertext-op request: (op, operand ciphertexts[, rotation amount]). The
+engine jit-compiles ONE step per trace signature, so requests must reach
+it in fixed-shape batches of like kind. This module does that shaping:
+
+  - :class:`RequestQueue` buckets incoming requests by
+    ``(op, logq[, op-specific extra])`` — every member of a bucket shares
+    a trace signature — and preserves FIFO order within each bucket.
+  - :class:`BatchAssembler` stacks a bucket's ciphertext limb arrays into
+    ``(B, N, qlimbs)`` operands, zero-padding up to the fixed batch size
+    (zero polynomials are valid ciphertext material; padded lanes are
+    computed and discarded), and records ``n_valid`` so the engine can
+    slice real results back out.
+
+Placement onto the mesh's "data" axis happens in the engine (the
+assembler stays device-free so it can run on a frontend host).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cipher import Ciphertext
+
+__all__ = ["Request", "Batch", "RequestQueue", "BatchAssembler", "OPS"]
+
+# op -> number of ciphertext operands
+OPS = {"mul": 2, "rotate": 1, "slot_sum": 1}
+
+BucketKey = Tuple  # (op, logq, extra): extra = r | n_slots | None
+
+
+@dataclasses.dataclass
+class Request:
+    """One ciphertext-op request.
+
+    cts: operand ciphertexts (2 for "mul", 1 otherwise), all at the same
+    modulus 2^logq. `r` is the left-rotation amount for "rotate".
+    """
+
+    rid: int
+    op: str
+    cts: Tuple[Ciphertext, ...]
+    r: int = 0
+    t_submit: float = 0.0
+
+    @property
+    def logq(self) -> int:
+        return self.cts[0].logq
+
+    @property
+    def bucket_key(self) -> BucketKey:
+        if self.op == "rotate":
+            return (self.op, self.logq, self.r)
+        if self.op == "slot_sum":
+            return (self.op, self.logq, self.cts[0].n_slots)
+        return (self.op, self.logq, None)
+
+
+@dataclasses.dataclass
+class Batch:
+    """A fixed-shape, assembly-complete unit of engine work.
+
+    arrays: stacked host (B, N, qlimbs) operands — "ax1"/"bx1" always,
+    "ax2"/"bx2" for "mul". Rows past n_valid are zero padding. The
+    engine's `_place` is the single host→device transfer.
+    """
+
+    key: BucketKey
+    requests: List[Request]
+    arrays: Dict[str, np.ndarray]
+    n_valid: int
+
+    @property
+    def op(self) -> str:
+        return self.key[0]
+
+    @property
+    def logq(self) -> int:
+        return self.key[1]
+
+    @property
+    def size(self) -> int:
+        return next(iter(self.arrays.values())).shape[0]
+
+    @property
+    def n_pad(self) -> int:
+        return self.size - self.n_valid
+
+
+class RequestQueue:
+    """FIFO-within-bucket request queue keyed by trace signature."""
+
+    def __init__(self):
+        self._buckets: "OrderedDict[BucketKey, Deque[Request]]" = \
+            OrderedDict()
+        self._next_rid = 0
+        self._submitted = 0
+
+    def submit(self, op: str, cts: Tuple[Ciphertext, ...], r: int = 0,
+               t_submit: Optional[float] = None) -> int:
+        """Enqueue a request; returns its request id."""
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}; serve one of {set(OPS)}")
+        cts = tuple(cts) if isinstance(cts, (tuple, list)) else (cts,)
+        if len(cts) != OPS[op]:
+            raise ValueError(
+                f"op {op!r} takes {OPS[op]} ciphertext(s), got {len(cts)}")
+        if any(c.logq != cts[0].logq for c in cts):
+            raise ValueError("operands must share a modulus (paper §III-B)")
+        if op == "rotate" and r <= 0:
+            raise ValueError("rotate needs a positive rotation amount r")
+        req = Request(rid=self._next_rid, op=op, cts=cts, r=r,
+                      t_submit=time.perf_counter()
+                      if t_submit is None else t_submit)
+        self._next_rid += 1
+        self._submitted += 1
+        self._buckets.setdefault(req.bucket_key, deque()).append(req)
+        return req.rid
+
+    @property
+    def depth(self) -> int:
+        return sum(len(d) for d in self._buckets.values())
+
+    @property
+    def submitted(self) -> int:
+        return self._submitted
+
+    def bucket_depths(self) -> Dict[BucketKey, int]:
+        return {k: len(d) for k, d in self._buckets.items() if d}
+
+    def ready_key(self, batch: int) -> Optional[BucketKey]:
+        """Oldest bucket holding at least a full batch, else None."""
+        for k, d in self._buckets.items():
+            if len(d) >= batch:
+                return k
+        return None
+
+    def any_key(self) -> Optional[BucketKey]:
+        """Oldest non-empty bucket (for flush/drain with padding)."""
+        for k, d in self._buckets.items():
+            if d:
+                return k
+        return None
+
+    def pop_bucket(self, key: BucketKey, max_n: int) -> List[Request]:
+        """Dequeue up to max_n requests from one bucket, FIFO."""
+        d = self._buckets.get(key)
+        if not d:
+            return []
+        out = [d.popleft() for _ in range(min(max_n, len(d)))]
+        if not d:
+            del self._buckets[key]
+        return out
+
+
+class BatchAssembler:
+    """Stack + zero-pad a same-bucket request list to the fixed shape."""
+
+    def __init__(self, batch: int):
+        assert batch >= 1
+        self.batch = batch
+
+    def assemble(self, requests: List[Request]) -> Batch:
+        if not requests:
+            raise ValueError("cannot assemble an empty batch")
+        if len(requests) > self.batch:
+            raise ValueError(
+                f"{len(requests)} requests exceed batch size {self.batch}")
+        key = requests[0].bucket_key
+        if any(r.bucket_key != key for r in requests):
+            raise ValueError("mixed buckets in one batch: "
+                             f"{ {r.bucket_key for r in requests} }")
+        n_valid = len(requests)
+        pad = self.batch - n_valid
+
+        def stack(attr: str, operand: int) -> np.ndarray:
+            rows = [np.asarray(getattr(r.cts[operand], attr))
+                    for r in requests]
+            if pad:
+                z = np.zeros_like(rows[0])
+                rows = rows + [z] * pad
+            return np.stack(rows)
+
+        arrays = {"ax1": stack("ax", 0), "bx1": stack("bx", 0)}
+        if key[0] == "mul":
+            arrays["ax2"] = stack("ax", 1)
+            arrays["bx2"] = stack("bx", 1)
+        return Batch(key=key, requests=list(requests), arrays=arrays,
+                     n_valid=n_valid)

@@ -1,0 +1,146 @@
+"""HEServer: the composed serving runtime (queue → engine → metrics).
+
+Glues the four subsystem pieces into the request loop `launch.serve --he`
+and `benchmarks/serve_he.py` drive:
+
+  submit(op, cts[, r])  →  RequestQueue buckets by (op, level)
+  poll()                →  assemble the oldest full bucket, run it on the
+                           mesh, record throughput/latency, return
+                           (rid, Ciphertext) results
+  drain()               →  flush remaining partial buckets with padding
+
+One HEServer owns one resident TableCache (tables built once at logQ,
+every level served as slices) and one OpEngine (one compiled step per
+(op, level) signature) — the serving design HEAX/Medha argue for: keys
+and tables stay resident, work streams through them.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cipher import Ciphertext, EvalKey
+from repro.core.params import HEParams
+from repro.hserve.engine import OpEngine
+from repro.hserve.metrics import ServeMetrics
+from repro.hserve.queue import BatchAssembler, RequestQueue
+from repro.hserve.tables import TableCache
+
+__all__ = ["HEServer"]
+
+
+class HEServer:
+    """Batched multi-level HE serving over a device mesh.
+
+    params: the HEAAN parameter set every request must use.
+    evk:    evaluation key (required to serve "mul").
+    rot_keys: {r: rotation key} (required for "rotate" r and for the
+              doubling amounts of any "slot_sum").
+    mesh:   device mesh (defaults to the host mesh); batch rides "data",
+            CRT primes ride "model".
+    batch:  fixed engine batch size — every trace is (batch, N, qlimbs).
+    """
+
+    def __init__(self, params: HEParams, evk: Optional[EvalKey] = None,
+                 rot_keys: Optional[Dict[int, EvalKey]] = None, *,
+                 mesh=None, batch: int = 8, use_kernels: bool = False,
+                 **engine_knobs):
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.params = params
+        self.mesh = mesh
+        self.batch = batch
+        self.cache = TableCache(params, evk, rot_keys)
+        self.engine = OpEngine(params, mesh, self.cache,
+                               use_kernels=use_kernels, **engine_knobs)
+        self.queue = RequestQueue()
+        self.assembler = BatchAssembler(batch)
+        self.metrics = ServeMetrics()
+
+    # ---- request intake --------------------------------------------------
+
+    def submit(self, op: str, cts, r: int = 0) -> int:
+        """Enqueue one request; returns its rid (used to match results).
+
+        Key availability is checked HERE, not at execution: a request
+        the engine cannot serve must never enter the queue (it would
+        fail mid-drain, after being popped, taking the batch's other
+        requests down with it).
+        """
+        if op == "mul":
+            self.cache.evk()                  # raises when absent
+        elif op == "rotate":
+            self.cache.rot_key(r)             # raises when absent
+        elif op == "slot_sum":
+            from repro.hserve.engine import slot_sum_rotations
+            first = cts[0] if isinstance(cts, (tuple, list)) else cts
+            missing = [rr for rr in slot_sum_rotations(first.n_slots)
+                       if rr not in self.cache.rotation_amounts]
+            if missing:
+                raise KeyError(
+                    f"slot_sum over {first.n_slots} slots needs rotation "
+                    f"keys {missing}; loaded: {self.cache.rotation_amounts}")
+        return self.queue.submit(op, cts, r=r)
+
+    def submit_mul(self, c1: Ciphertext, c2: Ciphertext) -> int:
+        return self.submit("mul", (c1, c2))
+
+    def submit_rotate(self, ct: Ciphertext, r: int) -> int:
+        return self.submit("rotate", (ct,), r=r)
+
+    def submit_slot_sum(self, ct: Ciphertext) -> int:
+        return self.submit("slot_sum", (ct,))
+
+    # ---- the serving loop ------------------------------------------------
+
+    def poll(self, flush: bool = False) -> List[Tuple[int, Ciphertext]]:
+        """Run at most one batch. Takes the oldest bucket holding a full
+        batch; with `flush`, takes the oldest non-empty bucket and pads.
+        Returns completed (rid, Ciphertext) pairs (empty if no work ran).
+        """
+        self.metrics.record_depth(self.queue.depth)
+        key = self.queue.ready_key(self.batch)
+        if key is None and flush:
+            key = self.queue.any_key()
+        if key is None:
+            return []
+        reqs = self.queue.pop_bucket(key, self.batch)
+        b = self.assembler.assemble(reqs)
+        self.engine.warm_batch(b)        # keep compile out of steady state
+        t0 = time.perf_counter()
+        outs = self.engine.run(b)
+        done = time.perf_counter()
+        self.metrics.record_batch(
+            b.op, b.logq, b.n_valid, b.n_pad, done - t0,
+            [done - r.t_submit for r in b.requests])
+        return [(r.rid, ct) for r, ct in zip(b.requests, outs)]
+
+    def drain(self) -> Dict[int, Ciphertext]:
+        """Serve until the queue is empty (padding the stragglers);
+        returns {rid: result}."""
+        results: Dict[int, Ciphertext] = {}
+        while self.queue.depth:
+            for rid, ct in self.poll(flush=True):
+                results[rid] = ct
+        return results
+
+    # ---- accounting ------------------------------------------------------
+
+    def reset_metrics(self) -> None:
+        """Start a fresh measurement window (compiled steps and resident
+        tables are kept — use after a warm-up pass so reported latencies
+        are steady state)."""
+        self.metrics = ServeMetrics()
+
+    def stats(self) -> dict:
+        return {
+            **self.metrics.summary(),
+            "cache": self.cache.stats(),
+            "engine": {"steps_compiled": self.engine.n_compiled,
+                       "compile_s": round(self.engine.compile_s, 3)},
+            "mesh": dict(self.mesh.shape),
+            "batch": self.batch,
+            "submitted": self.queue.submitted,
+        }

@@ -1,0 +1,157 @@
+"""Level-aware resident table cache for the HE serving runtime.
+
+A multi-level circuit touches many moduli logq < logQ, and a naive server
+rebuilds + re-uploads `region_tables` per level. But almost everything in
+a region-table pytree is prime-pool state (twiddles, Montgomery/Shoup
+constants, CRT rows): at level logq those arrays are STRICT row/column
+slices of the top level's — the table set Medha keeps resident on chip.
+So this cache:
+
+  - materializes the prime-pool tables ONCE on device, at full
+    (max_np, ·) shapes (the `resident` pytree), and serves every level's
+    region-1/2 tables as row slices ``[:np]`` (plus a column slice
+    ``[:qlimbs]`` for the CRT rows);
+  - caches the few genuinely per-np entries (the iCRT tables, which
+    depend on P = ∏ first-np primes) keyed by np — shared across every
+    level and region that lands on the same prime count;
+  - holds the evaluation key and any rotation keys as device pytrees in
+    `dist.he_pipeline.evk_tables` form (the engine slices key rows
+    ``[:np2]`` per level inside the step).
+
+The sliced pytrees are value-identical to a freshly built
+``runtime_tables(make_context(params, logq), evk)`` at every level
+(tests/test_hserve.py asserts array equality), so serving from the cache
+cannot change a single output bit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.cipher import EvalKey
+from repro.core.context import build_global_tables, build_icrt_tables
+from repro.core.params import HEParams
+from repro.dist.he_pipeline import evk_tables
+
+__all__ = ["TableCache"]
+
+# Resident (prime-pool) entries: rows slice by np; crt rows also slice
+# their limb column by the level's qlimbs.
+_ROW_KEYS = ("primes", "psi_rev", "psi_rev_shoup", "ipsi_rev",
+             "ipsi_rev_shoup", "n_inv", "n_inv_shoup", "pprime", "r2",
+             "p_inv_f64", "quot_fix")
+_ROWCOL_KEYS = ("crt_tb", "crt_tb_shoup")
+# Per-np entries (depend on P = ∏ first-np primes; cached by np).
+_ICRT_KEYS = ("inv_P", "inv_P_shoup", "pdivp", "P_limbs", "P_half_limbs")
+
+
+class TableCache:
+    """One resident device table set; per-level views by slicing."""
+
+    def __init__(self, params: HEParams, evk: Optional[EvalKey] = None,
+                 rot_keys: Optional[Dict[int, EvalKey]] = None):
+        self.params = params
+        g = build_global_tables(params)
+        top = build_icrt_tables(params, params.max_np)
+        self._resident: Dict[str, jnp.ndarray] = {
+            "primes": jnp.asarray(g.primes),
+            "psi_rev": jnp.asarray(g.psi_rev),
+            "psi_rev_shoup": jnp.asarray(g.psi_rev_shoup),
+            "ipsi_rev": jnp.asarray(g.ipsi_rev),
+            "ipsi_rev_shoup": jnp.asarray(g.ipsi_rev_shoup),
+            "n_inv": jnp.asarray(g.n_inv),
+            "n_inv_shoup": jnp.asarray(g.n_inv_shoup),
+            "pprime": jnp.asarray(g.pprime),
+            "r2": jnp.asarray(g.r2),
+            "crt_tb": jnp.asarray(g.crt_tb),
+            "crt_tb_shoup": jnp.asarray(g.crt_tb_shoup),
+            "p_inv_f64": jnp.asarray(g.p_inv_f64),
+            # ⌊β²/p⌋ depends only on the prime, so despite living in
+            # IcrtTables it row-slices like the pool tables do
+            "quot_fix": jnp.asarray(top.quot_fix),
+        }
+        self._icrt_dev: Dict[int, Dict[str, jnp.ndarray]] = {}
+        self._levels: Dict[int, Tuple[Dict, Dict]] = {}
+        self._ek = {k: jnp.asarray(v) for k, v in evk_tables(evk).items()} \
+            if evk is not None else None
+        self._rot = {
+            int(r): {k: jnp.asarray(v) for k, v in evk_tables(rk).items()}
+            for r, rk in (rot_keys or {}).items()}
+        self.hits = 0
+        self.misses = 0
+
+    # ---- per-level region tables ----------------------------------------
+
+    def level_tables(self, logq: int) -> Tuple[Dict, Dict]:
+        """(t1, t2) region-table pytrees for modulus 2^logq, as slices of
+        the resident set. Cached per level; cheap on miss (no host
+        rebuild, no re-upload of pool tables)."""
+        if logq in self._levels:
+            self.hits += 1
+            return self._levels[logq]
+        self.misses += 1
+        p = self.params
+        K = p.qlimbs(logq)
+        t1 = self._region_view(p.np_region1(logq), K)
+        t2 = self._region_view(p.np_region2(logq), K)
+        self._levels[logq] = (t1, t2)
+        return t1, t2
+
+    def _region_view(self, npn: int, K: int) -> Dict[str, jnp.ndarray]:
+        t = {k: self._resident[k][:npn] for k in _ROW_KEYS}
+        t.update({k: self._resident[k][:npn, :K] for k in _ROWCOL_KEYS})
+        t.update(self._icrt(npn))
+        return t
+
+    def _icrt(self, npn: int) -> Dict[str, jnp.ndarray]:
+        if npn not in self._icrt_dev:
+            tabs = build_icrt_tables(self.params, npn)
+            self._icrt_dev[npn] = {
+                k: jnp.asarray(getattr(tabs, k)) for k in _ICRT_KEYS}
+        return self._icrt_dev[npn]
+
+    # ---- keys ------------------------------------------------------------
+
+    def evk(self) -> Dict[str, jnp.ndarray]:
+        if self._ek is None:
+            raise ValueError("no evaluation key loaded (mul unavailable)")
+        return self._ek
+
+    def rot_key(self, r: int) -> Dict[str, jnp.ndarray]:
+        try:
+            return self._rot[int(r)]
+        except KeyError:
+            raise KeyError(
+                f"no rotation key for r={r}; loaded: "
+                f"{sorted(self._rot)}") from None
+
+    def add_rot_key(self, r: int, rk: EvalKey) -> None:
+        self._rot[int(r)] = {
+            k: jnp.asarray(v) for k, v in evk_tables(rk).items()}
+
+    @property
+    def rotation_amounts(self):
+        return sorted(self._rot)
+
+    # ---- accounting ------------------------------------------------------
+
+    def stats(self) -> dict:
+        res_b = sum(int(v.size) * v.dtype.itemsize
+                    for v in self._resident.values())
+        icrt_b = sum(int(v.size) * v.dtype.itemsize
+                     for d in self._icrt_dev.values() for v in d.values())
+        key_b = sum(int(v.size) * v.dtype.itemsize
+                    for d in ([self._ek] if self._ek else [])
+                    + list(self._rot.values()) for v in d.values())
+        return {
+            "levels_materialized": sorted(self._levels),
+            "np_sets": sorted(self._icrt_dev),
+            "rot_keys": self.rotation_amounts,
+            "hits": self.hits,
+            "misses": self.misses,
+            "resident_mib": round(res_b / 2**20, 3),
+            "icrt_mib": round(icrt_b / 2**20, 3),
+            "keys_mib": round(key_b / 2**20, 3),
+        }

@@ -1,9 +1,11 @@
 """Serving drivers: batched LM prefill + greedy decode, and the paper's
-own workload — batched HE Mul — over the mesh-sharded pipeline.
+own workload — a batched multi-level HE request stream — over the
+repro.hserve runtime (queue → level-aware table cache → sharded engine).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --preset smoke --batch 4 --prompt-len 32 --gen 16
-    PYTHONPATH=src python -m repro.launch.serve --he --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --he --batch 8 \
+        --requests 24 --levels 3 --rotations 4 [--kernels]
 
 Both paths place their state with repro.dist.sharding rules on the host
 mesh (whatever devices this process has), so the same driver scales from
@@ -41,63 +43,72 @@ def generate(params, cfg: ModelConfig, tokens, gen_steps: int,
     return jnp.concatenate(out, axis=1)
 
 
-def serve_he(batch: int, steps: int = 3, model_shards: int = 1) -> dict:
-    """Batched HE-Mul serving over the mesh-sharded pipeline.
+def serve_he(batch: int, requests: int = 0, levels: int = 1,
+             rotations: int = 0, model_shards: int = 1,
+             use_kernels: bool = False, seed: int = 0) -> dict:
+    """Batched multi-level HE serving over the repro.hserve runtime.
 
-    Encrypts `batch` ciphertext pairs, places them with he_limb_sharding
-    on the host mesh, runs the jit'd make_he_mul_step, and checks the
-    decrypted products. Returns a stats dict (printed by main).
+    Builds an HEServer (resident tables + jit-once engine on the host
+    mesh), submits a mixed stream of HE-Mul and rotate requests spread
+    over `levels` moduli, drains the queue with padded batching, and
+    verifies every decrypted result. Returns the server stats dict plus
+    a max_err field (printed by main).
     """
     from repro.configs.heaan_mul import SMOKE
     from repro.core import heaan as H
-    from repro.core.context import make_context
     from repro.core.keys import keygen
-    from repro.dist import he_pipeline as hp
-    from repro.dist.sharding import he_limb_sharding
+    from repro.core.rotate import rot_keygen
+    from repro.hserve import HEServer
     from repro.launch.mesh import make_host_mesh
 
     params = SMOKE
+    requests = requests or 2 * batch + 1   # force >1 batch and padding
+    # the lowest level logq = logp is excluded: mul results there cannot
+    # rescale (ciphertext exhausted), and verification rescales every mul
+    assert 1 <= levels <= params.L - 1, \
+        f"--levels must be in [1, {params.L - 1}]"
     sk, pk, evk = keygen(params, seed=0)
-    mesh = make_host_mesh(model=model_shards)   # validates divisibility
-    rng = np.random.default_rng(0)
+    rot_keys = {1: rot_keygen(params, sk, 1)} if rotations else {}
+    server = HEServer(params, evk, rot_keys,
+                      mesh=make_host_mesh(model=model_shards),
+                      batch=batch, use_kernels=use_kernels)
+
+    rng = np.random.default_rng(seed)
     n = params.n_slots_max
-    zs = [(rng.normal(size=n) + 1j * rng.normal(size=n),
-           rng.normal(size=n) + 1j * rng.normal(size=n))
-          for _ in range(batch)]
-    cts = [(H.encrypt_message(z1, pk, params, seed=2 * i + 1),
-            H.encrypt_message(z2, pk, params, seed=2 * i + 2))
-           for i, (z1, z2) in enumerate(zs)]
+    logqs = [params.logQ - i * params.logp for i in range(levels)]
+    expect = {}   # rid -> ("mul", z1*z2) | ("rotate", roll(z, -1))
+    n_mul = requests - rotations
+    assert n_mul >= 0, "--rotations cannot exceed --requests"
+    for i in range(requests):
+        logq = logqs[i % levels]
+        if i < n_mul:
+            z1 = rng.normal(size=n) + 1j * rng.normal(size=n)
+            z2 = rng.normal(size=n) + 1j * rng.normal(size=n)
+            c1 = H.encrypt_message(z1, pk, params, seed=2 * i + 1)
+            c2 = H.encrypt_message(z2, pk, params, seed=2 * i + 2)
+            if logq < params.logQ:
+                c1 = H.he_mod_down(c1, params, logq)
+                c2 = H.he_mod_down(c2, params, logq)
+            expect[server.submit_mul(c1, c2)] = ("mul", z1 * z2)
+        else:
+            z = rng.normal(size=n) + 1j * rng.normal(size=n)
+            ct = H.encrypt_message(z, pk, params, seed=2 * i + 1)
+            if logq < params.logQ:
+                ct = H.he_mod_down(ct, params, logq)
+            expect[server.submit_rotate(ct, 1)] = ("rotate", np.roll(z, -1))
 
-    st = hp.he_static(params, params.logQ)
-    ctx = make_context(params, params.logQ)
-    t1, t2, ek = hp.runtime_tables(ctx, evk)
-    sh = he_limb_sharding(mesh, batch=batch)
-    ax1, bx1, ax2, bx2 = (
-        jax.device_put(jnp.stack([getattr(c[j], a) for c in cts]), sh)
-        for j, a in ((0, "ax"), (0, "bx"), (1, "ax"), (1, "bx")))
-    step = jax.jit(hp.make_he_mul_step(st, mesh))
-
-    t0 = time.time()
-    ax3, bx3 = jax.block_until_ready(step(t1, t2, ek, ax1, bx1, ax2, bx2))
-    compile_s = time.time() - t0
-    t0 = time.time()
-    for _ in range(steps):
-        ax3, bx3 = jax.block_until_ready(
-            step(t1, t2, ek, ax1, bx1, ax2, bx2))
-    steady_s = (time.time() - t0) / max(steps, 1)
-
-    from repro.core.cipher import Ciphertext
+    results = server.drain()
     errs = []
-    for i, (z1, z2) in enumerate(zs):
-        ct3 = Ciphertext(ax=ax3[i], bx=bx3[i], logq=params.logQ,
-                         logp=2 * params.log_delta, n_slots=n)
-        out = H.decrypt_message(H.rescale(ct3, params), sk, params)
-        errs.append(float(np.abs(out - z1 * z2).max()))
-    return {"batch": batch, "devices": len(jax.devices()),
-            "mesh": dict(mesh.shape), "compile_s": round(compile_s, 3),
-            "steady_s_per_step": round(steady_s, 4),
-            "mul_per_s": round(batch / max(steady_s, 1e-9), 1),
-            "max_err": max(errs)}
+    for rid, (op, want) in expect.items():
+        out = results[rid]
+        if op == "mul":
+            out = H.rescale(out, params)
+        got = H.decrypt_message(out, sk, params)
+        errs.append(float(np.abs(got - want).max()))
+    stats = server.stats()
+    stats["devices"] = len(jax.devices())
+    stats["max_err"] = max(errs)
+    return stats
 
 
 def main():
@@ -108,18 +119,42 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--he", action="store_true",
-                    help="serve batched HE Mul instead of an LM")
+                    help="serve a batched multi-level HE request stream "
+                         "(queue → level-aware table cache → sharded "
+                         "mul/rotate engine) instead of an LM")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="HE requests to stream (default 2·batch+1, which "
+                         "exercises multi-batch assembly and padding)")
+    ap.add_argument("--levels", type=int, default=1,
+                    help="number of moduli to spread HE requests over "
+                         "(level i serves logq = logQ − i·logp from the "
+                         "resident table cache)")
+    ap.add_argument("--rotations", type=int, default=0,
+                    help="how many of the HE requests are rotate(r=1) "
+                         "instead of mul")
+    ap.add_argument("--kernels", action="store_true",
+                    help="route HE stages through the repro.kernels "
+                         "Pallas paths (interpret mode off-TPU)")
     ap.add_argument("--model-shards", type=int, default=1,
                     help="size of the model axis of the host mesh")
     args = ap.parse_args()
 
     if args.he:
-        stats = serve_he(args.batch, model_shards=args.model_shards)
-        print(f"he_mul batch={stats['batch']} on {stats['devices']} "
-              f"device(s) {stats['mesh']}: {stats['mul_per_s']} mul/s "
-              f"(compile {stats['compile_s']}s, "
-              f"step {stats['steady_s_per_step']}s, "
-              f"max_err {stats['max_err']:.2e})")
+        stats = serve_he(args.batch, requests=args.requests,
+                         levels=args.levels, rotations=args.rotations,
+                         model_shards=args.model_shards,
+                         use_kernels=args.kernels)
+        ops = ", ".join(
+            f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
+            f"(p50 {d['latency_ms']['p50']}ms, "
+            f"p99 {d['latency_ms']['p99']}ms, pad {d['pad_frac']})"
+            for op, d in stats["per_op"].items())
+        print(f"hserve batch={stats['batch']} on {stats['devices']} "
+              f"device(s) {stats['mesh']} levels={stats['levels_served']} "
+              f"steps_compiled={stats['engine']['steps_compiled']} "
+              f"(compile {stats['engine']['compile_s']}s)")
+        print(f"  {ops}")
+        print(f"  max_err {stats['max_err']:.2e}")
         assert stats["max_err"] < 1e-2, "HE serving pipeline diverged"
         return
 

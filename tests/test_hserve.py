@@ -1,0 +1,406 @@
+"""repro.hserve tests: queue invariants, level-slice table equality,
+engine bitwise parity vs the single-device core references, metrics, and
+the composed server loop.
+
+The 8-device mesh parity check (sharded rotate/mul/slot-sum) runs in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8, same
+harness as tests/test_dist.py.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heaan as H
+from repro.core import test_params as small_params
+from repro.core.context import make_context
+from repro.core.keys import keygen
+from repro.core.rotate import he_rotate, rot_keygen
+from repro.dist import he_pipeline as hp
+from repro.hserve import (
+    BatchAssembler, HEServer, RequestQueue, ServeMetrics, TableCache,
+    slot_sum_rotations,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PARAMS = small_params(logN=4, beta_bits=32)   # N=16, n_slots=8, L=5
+
+
+@pytest.fixture(scope="module")
+def keys():
+    sk, pk, evk = keygen(PARAMS, seed=0)
+    rks = {r: rot_keygen(PARAMS, sk, r) for r in (1, 2, 4)}
+    return sk, pk, evk, rks
+
+
+def _enc(pk, seed, n=8):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=n) + 1j * rng.normal(size=n)
+    return z, H.encrypt_message(z, pk, PARAMS, seed=seed)
+
+
+# --------------------------------------------------------------------------
+# queue: bucketing and padding invariants
+# --------------------------------------------------------------------------
+
+def test_queue_buckets_by_op_level_and_r(keys):
+    _, pk, _, _ = keys
+    q = RequestQueue()
+    _, c1 = _enc(pk, 1)
+    _, c2 = _enc(pk, 2)
+    low = H.he_mod_down(c1, PARAMS, PARAMS.logQ - PARAMS.logp)
+    low2 = H.he_mod_down(c2, PARAMS, PARAMS.logQ - PARAMS.logp)
+    r0 = q.submit("mul", (c1, c2))
+    r1 = q.submit("mul", (c1, c2))
+    q.submit("mul", (low, low2))            # different level, new bucket
+    q.submit("rotate", (c1,), r=1)
+    q.submit("rotate", (c1,), r=2)          # different r, new bucket
+    q.submit("slot_sum", (c1,))
+    assert q.depth == 6
+    assert len(q.bucket_depths()) == 5
+    # oldest bucket with >= 2 requests is the top-level mul bucket
+    key = q.ready_key(2)
+    assert key == ("mul", PARAMS.logQ, None)
+    got = q.pop_bucket(key, 2)
+    assert [r.rid for r in got] == [r0, r1]   # FIFO within the bucket
+    assert q.ready_key(2) is None             # no other bucket is full
+    assert q.any_key() is not None            # but work remains for flush
+
+
+def test_server_rejects_unserveable_requests_at_submit(keys):
+    """A request the engine cannot serve must never enter the queue —
+    otherwise it fails mid-drain after being popped, taking the rest of
+    the queued work down with it."""
+    _, pk, evk, rks = keys
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    _, c1 = _enc(pk, 1)
+    server = HEServer(PARAMS, evk, {1: rks[1]}, mesh=mesh, batch=2)
+    with pytest.raises(KeyError):
+        server.submit_rotate(c1, 3)           # no key for r=3
+    with pytest.raises(KeyError):
+        server.submit_slot_sum(c1)            # needs r=2,4 too
+    no_evk = HEServer(PARAMS, rot_keys=rks, mesh=mesh, batch=2)
+    with pytest.raises(ValueError):
+        no_evk.submit_mul(c1, c1)             # no evaluation key
+    assert no_evk.submit_slot_sum(c1) == 0    # rotations fully keyed
+    assert server.queue.depth == 0
+
+
+def test_queue_rejects_bad_requests(keys):
+    _, pk, _, _ = keys
+    q = RequestQueue()
+    _, c1 = _enc(pk, 1)
+    low = H.he_mod_down(c1, PARAMS, PARAMS.logQ - PARAMS.logp)
+    with pytest.raises(ValueError):
+        q.submit("frobnicate", (c1,))
+    with pytest.raises(ValueError):
+        q.submit("mul", (c1,))                # arity
+    with pytest.raises(ValueError):
+        q.submit("mul", (c1, low))            # level mismatch
+    with pytest.raises(ValueError):
+        q.submit("rotate", (c1,), r=0)        # no rotation amount
+
+
+def test_assembler_pads_to_fixed_shape(keys):
+    _, pk, _, _ = keys
+    q = RequestQueue()
+    _, c1 = _enc(pk, 1)
+    _, c2 = _enc(pk, 2)
+    for _ in range(3):
+        q.submit("mul", (c1, c2))
+    asm = BatchAssembler(batch=4)
+    b = asm.assemble(q.pop_bucket(("mul", PARAMS.logQ, None), 4))
+    assert b.size == 4 and b.n_valid == 3 and b.n_pad == 1
+    assert set(b.arrays) == {"ax1", "bx1", "ax2", "bx2"}
+    for v in b.arrays.values():
+        assert v.shape == (4, PARAMS.N, PARAMS.qlimbs(PARAMS.logQ))
+        assert not np.asarray(v[3]).any()     # padded lane is zeros
+    # valid lanes carry the submitted operands, in request order
+    np.testing.assert_array_equal(np.asarray(b.arrays["ax1"][0]),
+                                  np.asarray(c1.ax))
+    np.testing.assert_array_equal(np.asarray(b.arrays["bx2"][2]),
+                                  np.asarray(c2.bx))
+    # rotate batches carry one operand only
+    q.submit("rotate", (c1,), r=1)
+    b = asm.assemble(q.pop_bucket(("rotate", PARAMS.logQ, 1), 4))
+    assert set(b.arrays) == {"ax1", "bx1"}
+    assert b.n_valid == 1 and b.n_pad == 3
+
+
+def test_assembler_rejects_mixed_and_oversize(keys):
+    _, pk, _, _ = keys
+    q = RequestQueue()
+    _, c1 = _enc(pk, 1)
+    _, c2 = _enc(pk, 2)
+    low = H.he_mod_down(c1, PARAMS, PARAMS.logQ - PARAMS.logp)
+    low2 = H.he_mod_down(c2, PARAMS, PARAMS.logQ - PARAMS.logp)
+    q.submit("mul", (c1, c2))
+    q.submit("mul", (low, low2))
+    reqs = (q.pop_bucket(("mul", PARAMS.logQ, None), 4)
+            + q.pop_bucket(("mul", PARAMS.logQ - PARAMS.logp, None), 4))
+    asm = BatchAssembler(batch=4)
+    with pytest.raises(ValueError):
+        asm.assemble(reqs)                    # mixed buckets
+    with pytest.raises(ValueError):
+        BatchAssembler(batch=1).assemble(reqs[:1] * 2)  # oversize
+    with pytest.raises(ValueError):
+        asm.assemble([])
+
+
+# --------------------------------------------------------------------------
+# tables: level slices == freshly built per-level tables
+# --------------------------------------------------------------------------
+
+def test_table_cache_level_slices_match_fresh_tables(keys):
+    """The resident-slice pytrees must be value-identical to
+    region_tables built from a fresh per-level context at EVERY level —
+    the whole bitwise-serving argument rests on this."""
+    _, _, evk, _ = keys
+    cache = TableCache(PARAMS, evk)
+    for i in range(3):
+        logq = PARAMS.logQ - i * PARAMS.logp
+        t1, t2 = cache.level_tables(logq)
+        ctx = make_context(PARAMS, logq)
+        for region, cached in ((1, t1), (2, t2)):
+            fresh = hp.region_tables(ctx, region)
+            assert set(cached) == set(fresh) == set(hp.REGION_TABLE_KEYS)
+            for k in fresh:
+                np.testing.assert_array_equal(
+                    np.asarray(cached[k]), np.asarray(jnp.asarray(fresh[k])),
+                    err_msg=f"level {logq} region {region} table {k}")
+    st = cache.stats()
+    assert len(st["levels_materialized"]) == 3
+    # second hit serves from cache
+    before = cache.hits
+    cache.level_tables(PARAMS.logQ)
+    assert cache.hits == before + 1
+
+
+def test_table_cache_keys_and_stats(keys):
+    _, _, evk, rks = keys
+    cache = TableCache(PARAMS, evk, {1: rks[1]})
+    assert set(cache.evk()) == set(hp.EVK_TABLE_KEYS)
+    assert set(cache.rot_key(1)) == set(hp.EVK_TABLE_KEYS)
+    with pytest.raises(KeyError):
+        cache.rot_key(2)
+    cache.add_rot_key(2, rks[2])
+    assert cache.rotation_amounts == [1, 2]
+    assert cache.stats()["resident_mib"] > 0
+    with pytest.raises(ValueError):
+        TableCache(PARAMS).evk()
+
+
+# --------------------------------------------------------------------------
+# engine parity vs core, through the composed server (1-device mesh)
+# --------------------------------------------------------------------------
+
+def _server(keys, **kw):
+    _, _, evk, rks = keys
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    return HEServer(PARAMS, evk, rks, mesh=mesh, batch=2, **kw)
+
+
+def test_served_mul_bitwise_equals_core_at_two_levels(keys):
+    sk, pk, evk, _ = keys
+    server = _server(keys)
+    cases = []
+    for i, logq in enumerate((PARAMS.logQ, PARAMS.logQ - PARAMS.logp)):
+        _, c1 = _enc(pk, 10 + 2 * i)
+        _, c2 = _enc(pk, 11 + 2 * i)
+        if logq < PARAMS.logQ:
+            c1 = H.he_mod_down(c1, PARAMS, logq)
+            c2 = H.he_mod_down(c2, PARAMS, logq)
+        rid = server.submit_mul(c1, c2)
+        cases.append((rid, H.he_mul(c1, c2, evk, PARAMS)))
+    res = server.drain()
+    for rid, ref in cases:
+        out = res[rid]
+        assert out.logq == ref.logq and out.logp == ref.logp
+        np.testing.assert_array_equal(np.asarray(out.ax),
+                                      np.asarray(ref.ax))
+        np.testing.assert_array_equal(np.asarray(out.bx),
+                                      np.asarray(ref.bx))
+
+
+def test_served_rotate_bitwise_equals_core(keys):
+    sk, pk, _, rks = keys
+    server = _server(keys)
+    _, ct = _enc(pk, 42)
+    low = H.he_mod_down(ct, PARAMS, PARAMS.logQ - PARAMS.logp)
+    cases = [(server.submit_rotate(ct, 1),
+              he_rotate(ct, 1, rks[1], PARAMS)),
+             (server.submit_rotate(low, 2),
+              he_rotate(low, 2, rks[2], PARAMS))]
+    res = server.drain()
+    for rid, ref in cases:
+        out = res[rid]
+        np.testing.assert_array_equal(np.asarray(out.ax),
+                                      np.asarray(ref.ax))
+        np.testing.assert_array_equal(np.asarray(out.bx),
+                                      np.asarray(ref.bx))
+
+
+def test_served_slot_sum_bitwise_equals_core_composition(keys):
+    sk, pk, _, rks = keys
+    server = _server(keys)
+    z, ct = _enc(pk, 77)
+    rid = server.submit_slot_sum(ct)
+    # reference: acc ← he_add(acc, he_rotate(acc, r)) for doubling r
+    acc = ct
+    for r in slot_sum_rotations(ct.n_slots):
+        acc = H.he_add(acc, he_rotate(acc, r, rks[r], PARAMS))
+    out = server.drain()[rid]
+    np.testing.assert_array_equal(np.asarray(out.ax), np.asarray(acc.ax))
+    np.testing.assert_array_equal(np.asarray(out.bx), np.asarray(acc.bx))
+    got = H.decrypt_message(out, sk, PARAMS)
+    np.testing.assert_allclose(got.real, np.full(8, z.real.sum()),
+                               atol=1e-2)
+
+
+def test_served_mul_with_kernels_bitwise(keys):
+    """The Pallas-routed engine path (satellite: use_kernels through the
+    batched stage wrappers) keeps the bitwise contract."""
+    _, pk, evk, _ = keys
+    server = _server(keys, use_kernels=True)
+    _, c1 = _enc(pk, 91)
+    _, c2 = _enc(pk, 92)
+    rid = server.submit_mul(c1, c2)
+    ref = H.he_mul(c1, c2, evk, PARAMS)
+    out = server.drain()[rid]
+    np.testing.assert_array_equal(np.asarray(out.ax), np.asarray(ref.ax))
+    np.testing.assert_array_equal(np.asarray(out.bx), np.asarray(ref.bx))
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+
+def test_metrics_roundtrip():
+    m = ServeMetrics()
+    m.record_depth(3)
+    m.record_depth(1)
+    m.record_batch("mul", 120, n_valid=3, n_pad=1, wall_s=0.5,
+                   latencies_s=[0.1, 0.2, 0.3])
+    m.record_batch("mul", 96, n_valid=4, n_pad=0, wall_s=0.5,
+                   latencies_s=[0.4] * 4)
+    m.record_batch("rotate", 120, n_valid=1, n_pad=3, wall_s=0.25,
+                   latencies_s=[0.9])
+    s = m.summary()
+    mul = s["per_op"]["mul"]
+    assert mul["batches"] == 2 and mul["requests"] == 7
+    assert mul["ops_per_s"] == pytest.approx(7.0)
+    assert mul["pad_frac"] == pytest.approx(1 / 8)
+    assert mul["latency_ms"]["p50"] == pytest.approx(400.0)
+    assert mul["latency_ms"]["p99"] <= mul["latency_ms"]["max"] == 400.0
+    assert s["per_op"]["rotate"]["pad_frac"] == pytest.approx(0.75)
+    assert s["levels_served"] == [96, 120]
+    assert s["queue_depth"]["max"] == 3
+    assert s["queue_depth"]["samples"] == 2
+
+
+def test_server_stats_shape(keys):
+    _, pk, _, _ = keys
+    server = _server(keys)
+    _, c1 = _enc(pk, 5)
+    _, c2 = _enc(pk, 6)
+    server.submit_mul(c1, c2)
+    assert server.poll() == []                # batch=2 not yet full
+    server.submit_mul(c1, c2)
+    done = server.poll()                      # full bucket runs
+    assert len(done) == 2
+    st = server.stats()
+    assert st["submitted"] == 2
+    assert st["engine"]["steps_compiled"] == 1
+    assert st["per_op"]["mul"]["pad_frac"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# 8-device mesh parity (subprocess harness, as tests/test_dist.py)
+# --------------------------------------------------------------------------
+
+def _run_subprocess(body: str) -> dict:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import json
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        import repro.core
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_hserve_ops_bitwise_on_8_device_mesh():
+    """Sharded hserve mul + rotate + slot_sum on a (2, 4) mesh are
+    bitwise identical to the core references at two served levels."""
+    res = _run_subprocess("""
+        from repro.core import heaan as H
+        from repro.core import test_params
+        from repro.core.keys import keygen
+        from repro.core.rotate import he_rotate, rot_keygen
+        from repro.hserve import HEServer, slot_sum_rotations
+
+        params = test_params(logN=5, beta_bits=32)
+        sk, pk, evk = keygen(params, seed=0)
+        rks = {r: rot_keygen(params, sk, r) for r in (1, 2, 4, 8)}
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        server = HEServer(params, evk, rks, mesh=mesh, batch=2)
+
+        rng = np.random.default_rng(7)
+        n = 16
+        def enc(seed):
+            z = rng.normal(size=n) + 1j * rng.normal(size=n)
+            return H.encrypt_message(z, pk, params, seed=seed)
+
+        logq2 = params.logQ - params.logp
+        cases = []
+        for i in range(2):                       # two mul levels
+            c1, c2 = enc(10 + 2 * i), enc(11 + 2 * i)
+            if i:
+                c1 = H.he_mod_down(c1, params, logq2)
+                c2 = H.he_mod_down(c2, params, logq2)
+            cases.append((server.submit_mul(c1, c2),
+                          H.he_mul(c1, c2, evk, params)))
+        ct = enc(30)
+        cases.append((server.submit_rotate(ct, 1),
+                      he_rotate(ct, 1, rks[1], params)))
+        low = H.he_mod_down(ct, params, logq2)
+        cases.append((server.submit_rotate(low, 2),
+                      he_rotate(low, 2, rks[2], params)))
+        cs = enc(40)
+        acc = cs
+        for r in slot_sum_rotations(cs.n_slots):
+            acc = H.he_add(acc, he_rotate(acc, r, rks[r], params))
+        cases.append((server.submit_slot_sum(cs), acc))
+
+        res = server.drain()
+        ok = all(
+            bool((np.asarray(res[rid].ax) == np.asarray(ref.ax)).all()
+                 and (np.asarray(res[rid].bx) == np.asarray(ref.bx)).all())
+            for rid, ref in cases)
+        print(json.dumps({
+            "ok": ok, "devices": len(jax.devices()),
+            "levels": server.stats()["levels_served"],
+            "steps": server.stats()["engine"]["steps_compiled"]}))
+    """)
+    assert res["devices"] == 8
+    assert res["steps"] >= 5
+    assert len(res["levels"]) == 2
+    assert res["ok"], "sharded hserve op diverged from core reference"
