@@ -3,7 +3,14 @@
 Drives HEServer with a mixed mul/rotate request stream at paper-shaped
 parameters and emits BENCH_serve_he.json — the repo's serving perf
 trajectory: steady-state mul/s and rotate/s, p50/p99 request latency,
-padding fraction, and the resident table-cache footprint.
+padding fraction, the resident table-cache footprint, plus (this PR's
+additions, schema documented in docs/SERVING.md):
+
+  - "trickle": p50/p99 request latency when the arrival rate is BELOW
+    the batch size and only the age-based flush policy (max_age_s) gets
+    requests served at all — the continuous-batching SLO path;
+  - "overlap": drain wall time for the same mul stream with the
+    double-buffered host↔device pipeline off vs on, and the speedup.
 
     PYTHONPATH=src python benchmarks/serve_he.py                # quick
     PYTHONPATH=src python benchmarks/serve_he.py --full         # Table III
@@ -26,7 +33,9 @@ import time
 
 
 def run(params, *, batch: int, mul_requests: int, rot_requests: int,
-        levels: int, model_shards: int, use_kernels: bool) -> dict:
+        levels: int, model_shards: int, use_kernels: bool,
+        trickle_requests: int = 6, trickle_max_age_s: float = 0.02,
+        overlap_muls: int = 0) -> dict:
     import numpy as np
 
     from repro.core import heaan as H
@@ -82,6 +91,39 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
 
     stats = server.stats()
     per_op = stats["per_op"]
+
+    # ---- overlap on/off: same mul stream, double buffering toggled ------
+    overlap_muls = overlap_muls or 2 * batch * max(1, levels)
+    top = by_level[params.logQ]
+
+    def overlap_drain(on: bool) -> float:
+        server.overlap = on
+        for i in range(overlap_muls):
+            cs = by_level[logqs[i % levels]]
+            server.submit_mul(cs[i % len(cs)], cs[(i + 1) % len(cs)])
+        t0 = time.perf_counter()
+        server.drain()
+        return time.perf_counter() - t0
+
+    off_s = overlap_drain(False)
+    on_s = overlap_drain(True)
+    server.overlap = False
+
+    # ---- trickle: arrival rate < batch; only the age policy flushes.
+    # adaptive_target is disabled here on purpose: with it on, a trickle
+    # is released the moment the target shrinks to the arrival rate and
+    # the age deadline never fires — this phase isolates the SLO path
+    # (age_flushes == trickle_requests when it works).
+    server.max_age_s = trickle_max_age_s
+    server.adaptive_target = False
+    server.reset_metrics()
+    for i in range(trickle_requests):
+        server.submit_mul(top[i % len(top)], top[(i + 1) % len(top)])
+        while not server.poll():          # poll until the age deadline
+            time.sleep(trickle_max_age_s / 10)   # fires (no full bucket)
+    tr = server.stats()
+    server.max_age_s = None
+    server.adaptive_target = True
     return {
         "params": {"logN": params.logN, "logQ": params.logQ,
                    "logp": params.logp, "beta_bits": params.beta_bits,
@@ -105,6 +147,19 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
         "setup_s": {"keygen": round(keygen_s, 3),
                     "encrypt_pool": round(encrypt_s, 3)},
         "drain_wall_s": round(drain_s, 3),
+        "trickle": {
+            "requests": trickle_requests,
+            "max_age_s": trickle_max_age_s,
+            "p50_ms": tr["per_op"]["mul"]["latency_ms"]["p50"],
+            "p99_ms": tr["per_op"]["mul"]["latency_ms"]["p99"],
+            "age_flushes": tr["flushes"]["age"],
+        },
+        "overlap": {
+            "muls": overlap_muls,
+            "off_drain_s": round(off_s, 4),
+            "on_drain_s": round(on_s, 4),
+            "speedup": round(off_s / on_s, 3) if on_s > 0 else 0.0,
+        },
     }
 
 

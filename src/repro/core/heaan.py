@@ -34,8 +34,9 @@ from repro.core.rns import DEFAULT, PipelineConfig
 
 __all__ = [
     "encrypt_coeffs", "encrypt_message", "decrypt_coeffs", "decrypt_message",
-    "he_add", "he_sub", "he_neg", "he_mul", "rescale", "he_mod_down",
-    "he_mul_plain", "he_add_plain", "encode_plain",
+    "he_add", "he_sub", "he_neg", "he_mul", "rescale", "rescale_poly",
+    "he_mod_down", "mod_down_poly", "he_mul_plain", "he_add_plain",
+    "encode_plain",
 ]
 
 
@@ -232,6 +233,14 @@ def he_add_plain(ct: Ciphertext, pt_limbs: jnp.ndarray, params: HEParams
         logq=ct.logq, logp=ct.logp, n_slots=ct.n_slots)
 
 
+def mod_down_poly(poly: jnp.ndarray, params: HEParams, logq2: int
+                  ) -> jnp.ndarray:
+    """Mask a mod-q limb polynomial down to modulus 2^logq2 and drop the
+    now-zero high limbs. Batch-agnostic ((..., L) leading axes pass
+    through), so `repro.hserve.engine` serves it as a batched step."""
+    return bigint.mask_bits(poly, logq2)[..., :params.qlimbs(logq2)]
+
+
 def he_mod_down(ct: Ciphertext, params: HEParams, logq2: int) -> Ciphertext:
     """Switch to a smaller modulus q' | q without touching the scale.
 
@@ -239,11 +248,45 @@ def he_mod_down(ct: Ciphertext, params: HEParams, logq2: int) -> Ciphertext:
     before HE Add/Mul between ciphertexts of different depths).
     """
     assert 0 < logq2 <= ct.logq
-    qlimbs2 = params.qlimbs(logq2)
     return Ciphertext(
-        ax=bigint.mask_bits(ct.ax, logq2)[..., :qlimbs2],
-        bx=bigint.mask_bits(ct.bx, logq2)[..., :qlimbs2],
+        ax=mod_down_poly(ct.ax, params, logq2),
+        bx=mod_down_poly(ct.bx, params, logq2),
         logq=logq2, logp=ct.logp, n_slots=ct.n_slots)
+
+
+def rescale_poly(poly: jnp.ndarray, params: HEParams, logq: int,
+                 dlogp: int) -> jnp.ndarray:
+    """Rounding-divide a mod-q limb polynomial by 2^dlogp (paper §III-A).
+
+    The coefficient is centered (sign-extended above bit logq−1 from its
+    mod-q lift), rounding-shifted right by dlogp, and re-masked at
+    logq' = logq − dlogp. All indexing is on the trailing limb axis, so
+    any leading batch axes pass through unchanged — `core.rescale` and
+    the batched `repro.hserve.engine` rescale step share this one
+    implementation (the bitwise contract between them is by construction).
+    """
+    logq2 = logq - dlogp
+    assert logq2 > 0, "ciphertext exhausted (needs bootstrapping)"
+    qlimbs2 = params.qlimbs(logq2)
+    beta = params.beta_bits
+    L = poly.shape[-1]
+    sign = (poly[..., (logq - 1) // beta] >> ((logq - 1) % beta)) & 1
+    high_fill = jnp.where(sign[..., None].astype(bool),
+                          jnp.asarray(~jnp.zeros((), poly.dtype)),
+                          jnp.zeros((), poly.dtype))
+    idx = jnp.arange(L)
+    w, r = divmod(logq, beta)
+    limb_sel = idx >= (w + (1 if r else 0))
+    lifted = jnp.where(limb_sel, high_fill, poly)
+    if r:
+        part = poly[..., w] | jnp.where(
+            sign.astype(bool),
+            jnp.asarray(((1 << beta) - (1 << r)) & ((1 << beta) - 1),
+                        poly.dtype),
+            jnp.zeros((), poly.dtype))
+        lifted = lifted.at[..., w].set(part)
+    out = bigint.shift_right_round(lifted, dlogp)
+    return bigint.mask_bits(out, logq2)[..., :max(qlimbs2, 1)]
 
 
 def rescale(ct: Ciphertext, params: HEParams, dlogp: int | None = None
@@ -251,35 +294,10 @@ def rescale(ct: Ciphertext, params: HEParams, dlogp: int | None = None
     """Divide by the rescaling factor p = 2^logp (paper §III-A).
 
     Coefficients are centered (mod-q lift), rounding-shifted, and re-masked
-    at logq' = logq − dlogp.
+    at logq' = logq − dlogp (see :func:`rescale_poly`).
     """
     dlogp = params.logp if dlogp is None else dlogp
-    logq2 = ct.logq - dlogp
-    assert logq2 > 0, "ciphertext exhausted (needs bootstrapping)"
-    qlimbs2 = params.qlimbs(logq2)
-
-    def shift(poly):
-        # sign-extend the centered value above bit logq-1, then shift
-        beta = params.beta_bits
-        L = poly.shape[-1]
-        sign = (poly[..., (ct.logq - 1) // beta]
-                >> ((ct.logq - 1) % beta)) & 1
-        high_fill = jnp.where(sign[..., None].astype(bool),
-                              jnp.asarray(~jnp.zeros((), poly.dtype)),
-                              jnp.zeros((), poly.dtype))
-        idx = jnp.arange(L)
-        w, r = divmod(ct.logq, beta)
-        limb_sel = idx >= (w + (1 if r else 0))
-        lifted = jnp.where(limb_sel, high_fill, poly)
-        if r:
-            part = poly[..., w] | jnp.where(
-                sign.astype(bool),
-                jnp.asarray(((1 << beta) - (1 << r)) & ((1 << beta) - 1),
-                            poly.dtype),
-                jnp.zeros((), poly.dtype))
-            lifted = lifted.at[..., w].set(part)
-        out = bigint.shift_right_round(lifted, dlogp)
-        return bigint.mask_bits(out, logq2)[..., :max(qlimbs2, 1)]
-
-    return Ciphertext(ax=shift(ct.ax), bx=shift(ct.bx), logq=logq2,
-                      logp=ct.logp - dlogp, n_slots=ct.n_slots)
+    return Ciphertext(
+        ax=rescale_poly(ct.ax, params, ct.logq, dlogp),
+        bx=rescale_poly(ct.bx, params, ct.logq, dlogp),
+        logq=ct.logq - dlogp, logp=ct.logp - dlogp, n_slots=ct.n_slots)

@@ -26,12 +26,18 @@ from repro.core.params import HEParams
 from repro.core.rns import DEFAULT, PipelineConfig
 
 __all__ = ["rot_keygen", "conj_keygen", "he_rotate", "he_conjugate",
-           "automorphism_poly", "automorphism_maps", "rotation_k"]
+           "automorphism_poly", "automorphism_maps", "rotation_k",
+           "conjugation_k"]
 
 
 def rotation_k(params: HEParams, r: int) -> int:
     """Galois element for a left-rotation by r slots."""
     return pow(5, r, 2 * params.N)
+
+
+def conjugation_k(params: HEParams) -> int:
+    """Galois element σ₋₁ for slot-wise complex conjugation (k = 2N−1)."""
+    return 2 * params.N - 1
 
 
 @lru_cache(maxsize=None)

@@ -22,10 +22,21 @@ output equals the single-device reference bit for bit (tests/test_dist.py).
 The batched stage wrappers are factored into a :class:`StageFns` bundle
 (``make_stage_fns``) plus a region-2 key-switch factory
 (``make_keyswitch_step``) so `repro.hserve.engine` can lift Galois
-rotations and slot-sum reductions onto the same table pytrees — and every
-stage can route through the repro.kernels Pallas paths (``use_kernels``;
-the kernels are exact integer drop-ins, so the bitwise contract holds on
-either path).
+rotations, conjugations, and slot-sum reductions onto the same table
+pytrees — every ciphertext op that key-switches shares Fig. 2's region 2
+verbatim — and every stage can route through the repro.kernels Pallas
+paths (``use_kernels``; the kernels are exact integer drop-ins, so the
+bitwise contract holds on either path).
+
+Table pytree note: ``quot_fix`` (in REGION_TABLE_KEYS since the Pallas
+routing landed) is ⌊β²/p_j⌋ as two β-bit limbs per prime — the
+fixed-point reciprocal the TPU iCRT kernel uses for its quotient
+estimate in place of the reference path's f64 multiply (TPUs have no
+f64). It is built by ``build_icrt_tables`` but depends only on the
+prime, so `repro.hserve.tables.TableCache` row-slices it from one
+resident copy like the prime-pool tables, not per-np like the other
+iCRT entries. See ``IcrtTables.quot_fix`` in `core/context.py` and
+`kernels/icrt/icrt.py`.
 """
 
 from __future__ import annotations
@@ -140,6 +151,9 @@ def region_tables(ctx: HEContext, region: int) -> Dict[str, np.ndarray]:
         "P_limbs": tabs.P_limbs,
         "P_half_limbs": tabs.P_half_limbs,
         "p_inv_f64": g.p_inv_f64[:npn],
+        # ⌊β²/p_j⌋, the TPU kernel's fixed-point quotient reciprocal (the
+        # no-f64 stand-in for p_inv_f64); per-prime, not per-P — see the
+        # module docstring
         "quot_fix": tabs.quot_fix,
     }
 

@@ -1,54 +1,78 @@
-"""repro.hserve — batched HE serving runtime over the sharded pipeline.
+"""repro.hserve — the encrypted-circuit serving runtime.
 
 The paper's architectural claim (§V) is that HE-Mul *throughput* under
 thread-pinned batching — not single-op latency — is what makes HEAAN
 serviceable; HEAX's per-modulus lanes and Medha's resident-on-chip
 key/table placement both say the winning serving design keeps ONE table
-set resident and streams work through it. `repro.hserve` is that design
-in JAX/GSPMD, layered on `repro.dist.he_pipeline`:
+set resident and streams work through it — and that the accelerator only
+pays off when the FULL ciphertext op set lives on the device, because
+real workloads chain mul → rescale → mod-down → rotate at descending
+levels (§III-A). `repro.hserve` is that design in JAX/GSPMD, layered on
+`repro.dist.he_pipeline`:
 
   - :mod:`repro.hserve.queue`   — request queue + batch assembler:
-    buckets by (op, level), pads to one fixed trace shape per bucket.
+    buckets by (op, level, extra), pads to one fixed trace shape per
+    bucket, and tracks request ages / arrival rate for the flush policy.
   - :mod:`repro.hserve.tables`  — level-aware resident table cache:
     tables materialize once at logQ; every level logq < logQ is served
-    as row-slices of the one resident pytree.
+    as row-slices of the one resident pytree. Holds evk, rotation, and
+    conjugation keys.
   - :mod:`repro.hserve.engine`  — jit-once op engine: mesh-sharded
-    `he_mul`, `he_rotate`, and slot-sum steps, bitwise identical to the
-    single-device `core` references.
+    mul / add / sub / rotate / conjugate / slot-sum / rescale / mod-down
+    steps, bitwise identical to the single-device `core` references,
+    with async dispatch/wait for double buffering.
+  - :mod:`repro.hserve.circuit` — encrypted-circuit op-DAG (CircuitOp)
+    + the (logq, logp) level-tracking validator.
   - :mod:`repro.hserve.metrics` — steady-state throughput / latency /
-    queue-depth accounting.
-  - :mod:`repro.hserve.server`  — :class:`HEServer`, the composed loop.
+    queue-depth / flush-cause accounting.
+  - :mod:`repro.hserve.server`  — :class:`HEServer`, the composed loop:
+    age-based continuous batching (`max_age_s`), adaptive bucket
+    targets, double-buffered pipelining (`overlap`), and
+    `submit_circuit` for whole-circuit server-side evaluation.
 
-Usage — serve a mixed multi-level stream on the host mesh::
+Usage — serve a degree-4 encrypted polynomial in one round trip::
 
     from repro.core import heaan as H
     from repro.core.keys import keygen
-    from repro.core.rotate import rot_keygen
     from repro.core.params import test_params
-    from repro.hserve import HEServer
+    from repro.core.rotate import conj_keygen, rot_keygen
+    from repro.hserve import CircuitOp, HEServer
 
     params = test_params(logN=5, beta_bits=32)
     sk, pk, evk = keygen(params, seed=0)
     server = HEServer(params, evk,
-                      rot_keys={1: rot_keygen(params, sk, 1)}, batch=4)
+                      rot_keys={1: rot_keygen(params, sk, 1)},
+                      conj_key=conj_keygen(params, sk),
+                      batch=4, max_age_s=0.05)
 
-    c1 = H.encrypt_message(z1, pk, params, seed=1)
-    c2 = H.encrypt_message(z2, pk, params, seed=2)
-    rid_mul = server.submit_mul(c1, c2)           # level logQ
-    low = H.he_mod_down(c1, params, params.logQ - params.logp)
-    rid_rot = server.submit_rotate(low, r=1)      # a lower level
+    x = H.encrypt_message(z, pk, params, seed=1)
+    cid = server.submit_circuit([
+        CircuitOp("mul", ("x", "x")),          # x²  (logp doubles)
+        CircuitOp("rescale", (0,)),            # ÷2^logp, one level down
+        CircuitOp("mul", (1, 1)),              # x⁴
+        CircuitOp("rescale", (2,)),
+        CircuitOp("conjugate", (3,)),          # conj(x⁴)
+    ], inputs={"x": x})
+    ct_out = server.drain()[cid]               # ONE ciphertext back
 
-    results = server.drain()                      # {rid: Ciphertext}
-    print(server.stats()["per_op"]["mul"]["ops_per_s"])
+Plain per-op serving and the CLI driver still work::
 
-Or drive it from the CLI::
+    rid = server.submit_mul(c1, c2)
+    results = server.drain()                   # {rid: Ciphertext}
 
     PYTHONPATH=src python -m repro.launch.serve --he --batch 8 \\
-        --requests 24 --levels 3 --rotations 4 [--kernels]
+        --requests 24 --levels 3 --rotations 4 [--kernels] [--overlap]
+
+See docs/SERVING.md for the lifecycle and every knob.
 """
 
-from repro.hserve import engine, metrics, queue, tables  # noqa: F401
-from repro.hserve.engine import OpEngine, slot_sum_rotations  # noqa: F401
+from repro.hserve import circuit, engine, metrics, queue, tables  # noqa: F401
+from repro.hserve.circuit import (  # noqa: F401
+    CircuitOp, degree4_demo_circuit, validate_circuit,
+)
+from repro.hserve.engine import (  # noqa: F401
+    Inflight, OpEngine, slot_sum_rotations,
+)
 from repro.hserve.metrics import ServeMetrics  # noqa: F401
 from repro.hserve.queue import (  # noqa: F401
     Batch, BatchAssembler, Request, RequestQueue,
@@ -59,5 +83,6 @@ from repro.hserve.tables import TableCache  # noqa: F401
 __all__ = [
     "HEServer", "OpEngine", "TableCache", "ServeMetrics",
     "Request", "Batch", "RequestQueue", "BatchAssembler",
+    "CircuitOp", "validate_circuit", "degree4_demo_circuit", "Inflight",
     "slot_sum_rotations",
 ]

@@ -1,0 +1,149 @@
+"""Encrypted-circuit representation for server-side evaluation.
+
+The paper's workloads never run one HE Mul in isolation: a real encrypted
+computation is a small DAG of mul → rescale → mod-down → rotate/conjugate
+ops at DESCENDING levels (§III-A's level-management discipline). A
+serving runtime that round-trips the ciphertext to the client between
+levels throws away the batching and table-residency wins of §IV–V — so
+`HEServer.submit_circuit` accepts the whole DAG and walks it server-side,
+one queue submission per node, with every node's output level tracked.
+
+A circuit is a topologically-ordered list of :class:`CircuitOp` nodes.
+Each node's ``args`` reference either a named client input (str) or the
+output of an earlier node (int index). The LAST node is the circuit's
+output; its ciphertext is what the client gets back.
+
+:func:`validate_circuit` is the level tracker: it propagates
+(logq, logp) through the DAG from the input ciphertexts' metadata and
+raises — BEFORE anything is enqueued — on the errors that would
+otherwise surface mid-drain: level mismatches between operands, scale
+mismatches on add/sub, rescaling past exhaustion, mod-down to an
+out-of-range modulus, forward references, or unknown ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple, Union
+
+from repro.core.params import HEParams
+from repro.hserve.queue import OPS
+
+__all__ = ["CircuitOp", "validate_circuit", "degree4_demo_circuit"]
+
+NodeRef = Union[int, str]
+
+
+def degree4_demo_circuit(params: HEParams):
+    """The repo's acceptance/demo circuit over one input "x":
+    conj(x⁴) + x — mul → rescale → mul → rescale → mod-down → conjugate,
+    plus the mod-down alignment of x and the final add, exercising every
+    level-management op. Returns (ops, logq_md), where logq_md is the
+    aligned modulus (logQ − 3·logp). Shared by `launch.serve --circuit`
+    and the bitwise acceptance tests so all of them verify the SAME
+    circuit; decrypts to conj(z⁴) + z."""
+    logq_md = params.logQ - 3 * params.logp
+    assert logq_md > 0, "degree-4 demo circuit needs depth L >= 4"
+    return [
+        CircuitOp("mul", ("x", "x")),
+        CircuitOp("rescale", (0,)),
+        CircuitOp("mul", (1, 1)),
+        CircuitOp("rescale", (2,)),
+        CircuitOp("mod_down", (3,), logq2=logq_md),
+        CircuitOp("conjugate", (4,)),
+        CircuitOp("mod_down", ("x",), logq2=logq_md),
+        CircuitOp("add", (5, 6)),
+    ], logq_md
+
+
+@dataclasses.dataclass(frozen=True)
+class CircuitOp:
+    """One node of an encrypted circuit.
+
+    op:    any served op ("mul", "add", "sub", "rotate", "conjugate",
+           "slot_sum", "rescale", "mod_down").
+    args:  operand references — a str names a client input, an int the
+           output of an earlier node (0-based index into the op list).
+    r:     left-rotation amount ("rotate" only).
+    dlogp: scale drop for "rescale" (0 → params.logp).
+    logq2: target modulus for "mod_down".
+    """
+
+    op: str
+    args: Tuple[NodeRef, ...]
+    r: int = 0
+    dlogp: int = 0
+    logq2: int = 0
+
+
+def validate_circuit(ops: List[CircuitOp],
+                     input_meta: Dict[str, Tuple[int, int]],
+                     params: HEParams) -> List[Tuple[int, int]]:
+    """Propagate (logq, logp) through the DAG; raise on any ill-formed
+    node. Returns the per-node output (logq, logp) list — the level
+    schedule the server will serve.
+
+    input_meta maps input names to their ciphertexts' (logq, logp).
+    """
+    if not ops:
+        raise ValueError("empty circuit")
+    meta: List[Tuple[int, int]] = []
+    for i, node in enumerate(ops):
+        if node.op not in OPS:
+            raise ValueError(
+                f"node {i}: unknown op {node.op!r}; serve one of {set(OPS)}")
+        if len(node.args) != OPS[node.op]:
+            raise ValueError(
+                f"node {i}: op {node.op!r} takes {OPS[node.op]} operand(s),"
+                f" got {len(node.args)}")
+
+        def resolve(a: NodeRef) -> Tuple[int, int]:
+            if isinstance(a, str):
+                if a not in input_meta:
+                    raise ValueError(
+                        f"node {i}: unknown input {a!r}; inputs: "
+                        f"{sorted(input_meta)}")
+                return input_meta[a]
+            if not 0 <= a < i:
+                raise ValueError(
+                    f"node {i}: arg {a} is not an earlier node "
+                    f"(circuits are topologically ordered lists)")
+            return meta[a]
+
+        ms = [resolve(a) for a in node.args]
+        logq, logp = ms[0]
+        if any(m[0] != logq for m in ms):
+            raise ValueError(
+                f"node {i}: operand levels differ "
+                f"({[m[0] for m in ms]}); mod_down first (paper §III-B)")
+        if node.op == "mul":
+            logp = ms[0][1] + ms[1][1]
+        elif node.op in ("add", "sub"):
+            if ms[0][1] != ms[1][1]:
+                raise ValueError(
+                    f"node {i}: {node.op} operand scales differ "
+                    f"(logp {ms[0][1]} != {ms[1][1]}); rescale first")
+        elif node.op == "rotate":
+            if node.r <= 0:
+                raise ValueError(
+                    f"node {i}: rotate needs a positive rotation amount r")
+        elif node.op == "rescale":
+            if node.dlogp < 0:
+                raise ValueError(
+                    f"node {i}: negative rescale dlogp {node.dlogp} "
+                    f"(0 means params.logp)")
+            dlogp = node.dlogp or params.logp
+            if logq - dlogp <= 0:
+                raise ValueError(
+                    f"node {i}: rescale by {dlogp} exhausts the "
+                    f"ciphertext (logq {logq}; needs bootstrapping)")
+            logq -= dlogp
+            logp -= dlogp
+        elif node.op == "mod_down":
+            if not 0 < node.logq2 <= logq:
+                raise ValueError(
+                    f"node {i}: mod_down target logq2={node.logq2} "
+                    f"outside (0, {logq}]")
+            logq = node.logq2
+        meta.append((logq, logp))
+    return meta

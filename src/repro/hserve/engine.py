@@ -1,26 +1,49 @@
-"""Jit-once sharded op engine: HE Mul, Galois rotate, slot-sum reduction.
+"""Jit-once sharded op engine: the full ciphertext-level op set.
 
 One compiled step per trace signature ``(op, logq[, extra])``, each built
 from `dist.he_pipeline`'s stage bundle so every op shares the same mesh
 placement (batch → "data", CRT primes → "model") and the same table
 pytrees out of :class:`repro.hserve.tables.TableCache`:
 
-  - ``mul``     — `dist.he_pipeline.make_he_mul_step` unchanged.
-  - ``rotate``  — σ_k as a baked coefficient permutation + the SAME
+  - ``mul``      — `dist.he_pipeline.make_he_mul_step` unchanged
+    (paper Fig. 2, both regions).
+  - ``rotate``   — σ_{5^r} as a baked coefficient permutation + the SAME
     region-2 key switch HE Mul uses (`make_keyswitch_step`), so sharded
     rotations ride the pipeline for free (paper Fig. 2; HEAX lanes).
-  - ``slot_sum``— the log₂(n)-rotation all-slots sum (the primitive
+  - ``conjugate``— σ₋₁ (k = 2N−1) through the identical rotate step with
+    the conjugation key; the automorphism index is the only difference.
+  - ``slot_sum`` — the log₂(n)-rotation all-slots sum (the primitive
     encrypted dot products need), fused into one step: each round
     rotates by doubling powers and he_adds in place.
+  - ``rescale`` / ``mod_down`` — the paper §III-A level-management ops.
+    Because q is a power of two, both are batched shift/slice steps over
+    the limb axis (no NTT, no key switch): rescale is a centered
+    rounding shift by dlogp, mod-down a mask + limb slice. They reuse
+    `core.heaan.rescale_poly` / `mod_down_poly` verbatim — the core and
+    served paths share one implementation.
+  - ``add`` / ``sub`` — §III-B limb adds with mod-q masking; cheap, but
+    served so an entire encrypted circuit runs without a client
+    round-trip between levels (the HEAX/Medha argument).
 
 Every step is bitwise identical to its single-device `core` reference
-(`core.heaan.he_mul`, `core.rotate.he_rotate`, and the he_add/he_rotate
+(`core.heaan.he_mul`/`he_add`/`rescale`/`he_mod_down`,
+`core.rotate.he_rotate`/`he_conjugate`, and the he_add/he_rotate
 composition) — integer limb arithmetic partitions exactly across the
-mesh, so sharding and batching never change a bit.
+mesh, so sharding and batching never change a bit (tests/test_hserve.py,
+including the 8-device mesh harness).
+
+Double buffering: :meth:`OpEngine.dispatch` launches a step WITHOUT
+blocking (JAX dispatch is async; `device_put` of the next batch and the
+in-flight step overlap), returning an :class:`Inflight` handle that
+:meth:`OpEngine.wait` later blocks on. `HEServer` uses the pair to
+assemble batch n+1 while batch n runs, so the engine never waits on the
+frontend; :meth:`OpEngine.run` is the synchronous dispatch→wait
+composition.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -29,8 +52,9 @@ import jax.numpy as jnp
 
 from repro.core import bigint
 from repro.core.cipher import Ciphertext
+from repro.core.heaan import mod_down_poly, rescale_poly
 from repro.core.params import HEParams
-from repro.core.rotate import automorphism_poly, rotation_k
+from repro.core.rotate import automorphism_poly, conjugation_k, rotation_k
 from repro.dist.he_pipeline import (
     HEStatic, he_static, make_he_mul_step, make_keyswitch_step,
     make_stage_fns,
@@ -40,7 +64,8 @@ from repro.hserve.queue import Batch
 from repro.hserve.tables import TableCache
 
 __all__ = ["slot_sum_rotations", "make_he_rotate_step",
-           "make_slot_sum_step", "OpEngine"]
+           "make_slot_sum_step", "make_rescale_step", "make_mod_down_step",
+           "make_addsub_step", "Inflight", "OpEngine"]
 
 
 def slot_sum_rotations(n_slots: int) -> Tuple[int, ...]:
@@ -69,8 +94,10 @@ def make_he_rotate_step(st: HEStatic, mesh, k: int, **knobs):
     """Build step(t2, rk, ax, bx) -> (ax', bx') for the automorphism σ_k.
 
     Batched/sharded `core.rotate._apply_galois`: permute coefficients,
-    then region-2 key-switch against the rotation key (same table pytree
-    shape as the evk). knobs are make_stage_fns' (use_kernels, …).
+    then region-2 key-switch against the Galois key (same table pytree
+    shape as the evk). Serves both "rotate" (k = 5^r) and "conjugate"
+    (k = 2N−1) — the step is automorphism-index-generic. knobs are
+    make_stage_fns' (use_kernels, …).
     """
     sf = make_stage_fns(st, mesh, **knobs)
     keyswitch = make_keyswitch_step(st, sf)
@@ -114,13 +141,77 @@ def make_slot_sum_step(st: HEStatic, mesh, n_slots: int, **knobs):
     return step
 
 
+def make_rescale_step(st: HEStatic, mesh, dlogp: int, **knobs):
+    """Build step(ax, bx) -> (ax', bx') dividing by 2^dlogp (§III-A).
+
+    A pure batched shift/slice over the limb axis — q is a power of two,
+    so rescaling never touches the RNS side. Output arrays are
+    (B, N, qlimbs') at logq' = logq − dlogp. The body IS
+    `core.heaan.rescale_poly` (batch axes pass through), so served
+    rescale is bitwise `core.rescale` by construction.
+    """
+    sf = make_stage_fns(st, mesh, **knobs)
+    params, logq = st.params, st.logq
+
+    def step(ax, bx):
+        return (sf.out(rescale_poly(ax, params, logq, dlogp)),
+                sf.out(rescale_poly(bx, params, logq, dlogp)))
+
+    return step
+
+
+def make_mod_down_step(st: HEStatic, mesh, logq2: int, **knobs):
+    """Build step(ax, bx) -> (ax', bx') switching to modulus 2^logq2:
+    mask + slice to qlimbs(logq2) limbs (`core.heaan.mod_down_poly`
+    batched; level alignment before add/mul across depths)."""
+    sf = make_stage_fns(st, mesh, **knobs)
+    params = st.params
+
+    def step(ax, bx):
+        return (sf.out(mod_down_poly(ax, params, logq2)),
+                sf.out(mod_down_poly(bx, params, logq2)))
+
+    return step
+
+
+def make_addsub_step(st: HEStatic, mesh, op: str, **knobs):
+    """Build step(ax1, bx1, ax2, bx2) for "add"/"sub" — §III-B limb
+    arithmetic + mod-q masking, batched and placed on the mesh."""
+    assert op in ("add", "sub")
+    sf = make_stage_fns(st, mesh, **knobs)
+    fn = bigint.add if op == "add" else bigint.sub
+    logq = st.logq
+
+    def step(ax1, bx1, ax2, bx2):
+        return (sf.out(bigint.mask_bits(fn(ax1, ax2), logq)),
+                sf.out(bigint.mask_bits(fn(bx1, bx2), logq)))
+
+    return step
+
+
+@dataclasses.dataclass
+class Inflight:
+    """A dispatched-but-not-awaited engine step (double-buffer handle).
+
+    ax/bx are the step's async output arrays; the host is free to
+    assemble and `device_put` the next batch while the device works.
+    """
+
+    batch: Batch
+    ax: jnp.ndarray
+    bx: jnp.ndarray
+    t0: float
+
+
 class OpEngine:
     """Compile-once executor for assembled batches.
 
     Steps are cached by batch bucket key; tables come from the level-aware
     TableCache, so a new level costs one trace + slice views, never a
-    table rebuild. `run` places operands on the mesh's data axis, executes
-    the step, and re-wraps the valid rows as Ciphertexts.
+    table rebuild. `dispatch` places operands on the mesh's data axis and
+    launches the step asynchronously; `wait` blocks, re-wraps the valid
+    rows as Ciphertexts with the op's output level metadata, and returns
+    the measured device wall time. `run` = wait(dispatch(batch)).
     """
 
     def __init__(self, params: HEParams, mesh, cache: TableCache, *,
@@ -167,6 +258,13 @@ class OpEngine:
 
             def runner(a):
                 return step(t2, rk, a["ax1"], a["bx1"])
+        elif op == "conjugate":
+            step = jax.jit(make_he_rotate_step(
+                st, self.mesh, conjugation_k(self.params), **self._knobs))
+            ck = self.cache.conj_key()
+
+            def runner(a):
+                return step(t2, ck, a["ax1"], a["bx1"])
         elif op == "slot_sum":
             step = jax.jit(
                 make_slot_sum_step(st, self.mesh, extra, **self._knobs))
@@ -175,6 +273,24 @@ class OpEngine:
 
             def runner(a):
                 return step(t2, rks, a["ax1"], a["bx1"])
+        elif op == "rescale":
+            step = jax.jit(
+                make_rescale_step(st, self.mesh, extra, **self._knobs))
+
+            def runner(a):
+                return step(a["ax1"], a["bx1"])
+        elif op == "mod_down":
+            step = jax.jit(
+                make_mod_down_step(st, self.mesh, extra, **self._knobs))
+
+            def runner(a):
+                return step(a["ax1"], a["bx1"])
+        elif op in ("add", "sub"):
+            step = jax.jit(
+                make_addsub_step(st, self.mesh, op, **self._knobs))
+
+            def runner(a):
+                return step(a["ax1"], a["bx1"], a["ax2"], a["bx2"])
         else:
             raise ValueError(f"unknown op {op!r}")
         self._steps[key] = runner
@@ -209,22 +325,67 @@ class OpEngine:
         self.compile_s += time.perf_counter() - t0
         self._warmed.add(batch.key)
 
-    def run(self, batch: Batch) -> List[Ciphertext]:
-        """Execute one assembled batch; returns the n_valid outputs in
-        request order (padded lanes computed and discarded).
+    # ---- async execution (double buffering) ------------------------------
+
+    def dispatch(self, batch: Batch) -> Inflight:
+        """Place + launch one batch WITHOUT blocking on the result.
 
         A cold (op, level) signature is warmed first (`warm_batch`), so
-        steady-state metrics never include compilation.
+        steady-state metrics never include compilation. The returned
+        handle's arrays are async — the caller overlaps the next batch's
+        assembly and `device_put` against this step, then `wait`s.
         """
         self.warm_batch(batch)
         runner = self._step_for(batch.key)
         arrays = self._place(batch)
-        ax, bx = jax.block_until_ready(runner(arrays))
+        t0 = time.perf_counter()
+        ax, bx = runner(arrays)
+        return Inflight(batch=batch, ax=ax, bx=bx, t0=t0)
+
+    def wait(self, inflight: Inflight
+             ) -> Tuple[List[Ciphertext], float]:
+        """Block on a dispatched batch; returns (outputs, wall_s) with
+        the n_valid outputs in request order (padded lanes computed and
+        discarded) and the dispatch→ready wall time AS OBSERVED BY THE
+        HOST. On the synchronous run() path that is the device wall; on
+        the overlapped path it additionally includes any host time
+        between dispatch and this wait (an upper bound on device time —
+        HEServer.poll retires an idle in-flight batch eagerly, so the
+        slack is bounded by the caller's poll cadence). Per-op ops_per_s
+        under overlap is therefore host-observed; use drain wall clocks
+        (benchmarks/serve_he.py "overlap") to quantify the overlap win."""
+        jax.block_until_ready((inflight.ax, inflight.bx))
+        wall = time.perf_counter() - inflight.t0
+        return self._wrap(inflight.batch, inflight.ax, inflight.bx), wall
+
+    def run(self, batch: Batch) -> List[Ciphertext]:
+        """Synchronous dispatch→wait (kept for callers that don't
+        pipeline); returns the n_valid outputs in request order."""
+        outs, _ = self.wait(self.dispatch(batch))
+        return outs
+
+    def _wrap(self, batch: Batch, ax, bx) -> List[Ciphertext]:
+        """Re-wrap step outputs as Ciphertexts with each op's output
+        level metadata (the server-side level tracking contract):
+
+          mul          logq,          logp₁ + logp₂
+          add/sub      logq,          logp  (equality checked at submit)
+          rotate/conjugate/slot_sum   unchanged
+          rescale      logq − dlogp,  logp − dlogp
+          mod_down     logq2,         logp
+        """
+        op = batch.op
         out = []
         for i, req in enumerate(batch.requests):
             c0 = req.cts[0]
-            logp = (c0.logp + req.cts[1].logp if batch.op == "mul"
-                    else c0.logp)
-            out.append(Ciphertext(ax=ax[i], bx=bx[i], logq=batch.logq,
+            logq, logp = batch.logq, c0.logp
+            if op == "mul":
+                logp = c0.logp + req.cts[1].logp
+            elif op == "rescale":
+                logq -= req.dlogp
+                logp -= req.dlogp
+            elif op == "mod_down":
+                logq = req.logq2
+            out.append(Ciphertext(ax=ax[i], bx=bx[i], logq=logq,
                                   logp=logp, n_slots=c0.n_slots))
         return out

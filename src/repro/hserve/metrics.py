@@ -8,7 +8,10 @@ the serving runtime the numbers to prove it per op kind:
     wall time, compile excluded (steady state);
   - request latency: submit → batch-complete, p50/p99;
   - batch efficiency: padding fraction per op;
-  - queue depth samples over the run.
+  - queue depth samples over the run;
+  - flush causes: how many batches ran because a bucket was full, hit
+    its age deadline (the continuous-batching SLO path), or was drained —
+    the knob-tuning signal for `HEServer(max_age_s=...)`.
 
 Everything is plain host-side accumulation — no jax dependency — so the
 metrics can run on a frontend host next to the RequestQueue.
@@ -37,10 +40,13 @@ class _OpStats:
 class ServeMetrics:
     """Accumulate per-batch records; summarize steady-state rates."""
 
+    FLUSH_CAUSES = ("full", "age", "drain")
+
     def __init__(self):
         self._ops: Dict[str, _OpStats] = defaultdict(_OpStats)
         self._depths: List[int] = []
         self._levels: set = set()
+        self._flushes: Dict[str, int] = {c: 0 for c in self.FLUSH_CAUSES}
 
     def record_batch(self, op: str, logq: int, n_valid: int, n_pad: int,
                      wall_s: float, latencies_s: List[float]) -> None:
@@ -54,6 +60,12 @@ class ServeMetrics:
 
     def record_depth(self, depth: int) -> None:
         self._depths.append(depth)
+
+    def record_flush(self, cause: str) -> None:
+        """Count why a batch was released: "full" (bucket reached the
+        target), "age" (oldest request hit the deadline), "drain"."""
+        assert cause in self.FLUSH_CAUSES, cause
+        self._flushes[cause] += 1
 
     @staticmethod
     def _pct(xs: List[float], q: float) -> float:
@@ -80,6 +92,7 @@ class ServeMetrics:
         return {
             "per_op": per_op,
             "levels_served": sorted(self._levels),
+            "flushes": dict(self._flushes),
             "queue_depth": {
                 "mean": round(float(np.mean(self._depths)), 2)
                 if self._depths else 0.0,

@@ -1,18 +1,38 @@
 """Request queue and batch assembler for the HE serving runtime.
 
 The unit of work a privacy-preserving serving system schedules is a
-ciphertext-op request: (op, operand ciphertexts[, rotation amount]). The
+ciphertext-op request: (op, operand ciphertexts[, op parameters]). The
 engine jit-compiles ONE step per trace signature, so requests must reach
 it in fixed-shape batches of like kind. This module does that shaping:
 
   - :class:`RequestQueue` buckets incoming requests by
     ``(op, logq[, op-specific extra])`` — every member of a bucket shares
-    a trace signature — and preserves FIFO order within each bucket.
+    a trace signature — and preserves FIFO order within each bucket. It
+    also keeps the age/arrival-rate bookkeeping the server's continuous-
+    batching flush policy reads (``expired_key`` / ``arrival_rate``).
   - :class:`BatchAssembler` stacks a bucket's ciphertext limb arrays into
     ``(B, N, qlimbs)`` operands, zero-padding up to the fixed batch size
     (zero polynomials are valid ciphertext material; padded lanes are
     computed and discarded), and records ``n_valid`` so the engine can
     slice real results back out.
+
+The served op set covers the whole ciphertext-level circuit vocabulary
+the paper's workloads chain (§III-A/B: mul → rescale → mod-down →
+rotate/conjugate at descending levels) — HEAX and Medha both argue the
+accelerator only pays off when ALL of these stay on the device, not just
+HE Mul:
+
+  ==========  ========  =============================================
+  op          operands  extra in the bucket key
+  ==========  ========  =============================================
+  mul         2         — (region-1 product + region-2 key switch)
+  add / sub   2         — (limb add/sub + mask; paper §III-B)
+  rotate      1         r, the left-rotation amount (σ_{5^r})
+  conjugate   1         — (σ₋₁, k = 2N−1; same key-switch machinery)
+  slot_sum    1         n_slots (log₂ n fused rotate+add rounds)
+  rescale     1         dlogp, the scale drop (÷2^dlogp; §III-A)
+  mod_down    1         logq2, the target modulus
+  ==========  ========  =============================================
 
 Placement onto the mesh's "data" axis happens in the engine (the
 assembler stays device-free so it can run on a frontend host).
@@ -32,23 +52,28 @@ from repro.core.cipher import Ciphertext
 __all__ = ["Request", "Batch", "RequestQueue", "BatchAssembler", "OPS"]
 
 # op -> number of ciphertext operands
-OPS = {"mul": 2, "rotate": 1, "slot_sum": 1}
+OPS = {"mul": 2, "add": 2, "sub": 2, "rotate": 1, "conjugate": 1,
+       "slot_sum": 1, "rescale": 1, "mod_down": 1}
 
-BucketKey = Tuple  # (op, logq, extra): extra = r | n_slots | None
+BucketKey = Tuple  # (op, logq, extra): extra = r | n_slots | dlogp | logq2 | None
 
 
 @dataclasses.dataclass
 class Request:
     """One ciphertext-op request.
 
-    cts: operand ciphertexts (2 for "mul", 1 otherwise), all at the same
-    modulus 2^logq. `r` is the left-rotation amount for "rotate".
+    cts: operand ciphertexts (2 for "mul"/"add"/"sub", 1 otherwise), all
+    at the same modulus 2^logq. Op parameters: `r` is the left-rotation
+    amount for "rotate", `dlogp` the scale drop for "rescale", `logq2`
+    the target modulus for "mod_down".
     """
 
     rid: int
     op: str
     cts: Tuple[Ciphertext, ...]
     r: int = 0
+    dlogp: int = 0
+    logq2: int = 0
     t_submit: float = 0.0
 
     @property
@@ -61,7 +86,11 @@ class Request:
             return (self.op, self.logq, self.r)
         if self.op == "slot_sum":
             return (self.op, self.logq, self.cts[0].n_slots)
-        return (self.op, self.logq, None)
+        if self.op == "rescale":
+            return (self.op, self.logq, self.dlogp)
+        if self.op == "mod_down":
+            return (self.op, self.logq, self.logq2)
+        return (self.op, self.logq, None)     # mul / add / sub / conjugate
 
 
 @dataclasses.dataclass
@@ -69,8 +98,8 @@ class Batch:
     """A fixed-shape, assembly-complete unit of engine work.
 
     arrays: stacked host (B, N, qlimbs) operands — "ax1"/"bx1" always,
-    "ax2"/"bx2" for "mul". Rows past n_valid are zero padding. The
-    engine's `_place` is the single host→device transfer.
+    "ax2"/"bx2" for two-operand ops. Rows past n_valid are zero padding.
+    The engine's `_place` is the single host→device transfer.
     """
 
     key: BucketKey
@@ -96,15 +125,35 @@ class Batch:
 
 
 class RequestQueue:
-    """FIFO-within-bucket request queue keyed by trace signature."""
+    """FIFO-within-bucket request queue keyed by trace signature.
+
+    Besides bucketing, the queue is the flush policy's sensor: it knows
+    how long each bucket's head request has waited (`expired_key`) and
+    the recent arrival rate (`arrival_rate`), which the server uses to
+    size its adaptive bucket target (ROADMAP: continuous batching).
+    """
+
+    # window of recent submit timestamps used for the arrival-rate
+    # estimate; big enough to smooth bursts, small enough to track drift
+    _RATE_WINDOW = 64
 
     def __init__(self):
         self._buckets: "OrderedDict[BucketKey, Deque[Request]]" = \
             OrderedDict()
         self._next_rid = 0
         self._submitted = 0
+        self._arrivals: Deque[float] = deque(maxlen=self._RATE_WINDOW)
+
+    def reserve_rid(self) -> int:
+        """Allocate a request id without enqueuing anything (used by
+        HEServer.submit_circuit so circuit handles share the rid space
+        and can never collide with per-op request ids)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
 
     def submit(self, op: str, cts: Tuple[Ciphertext, ...], r: int = 0,
+               dlogp: int = 0, logq2: int = 0,
                t_submit: Optional[float] = None) -> int:
         """Enqueue a request; returns its request id."""
         if op not in OPS:
@@ -115,13 +164,30 @@ class RequestQueue:
                 f"op {op!r} takes {OPS[op]} ciphertext(s), got {len(cts)}")
         if any(c.logq != cts[0].logq for c in cts):
             raise ValueError("operands must share a modulus (paper §III-B)")
+        if op in ("add", "sub") and cts[0].logp != cts[1].logp:
+            raise ValueError(
+                f"{op} operands must share a scale: "
+                f"logp {cts[0].logp} != {cts[1].logp} (rescale first)")
         if op == "rotate" and r <= 0:
             raise ValueError("rotate needs a positive rotation amount r")
-        req = Request(rid=self._next_rid, op=op, cts=cts, r=r,
+        if op == "rescale":
+            if dlogp <= 0:
+                raise ValueError("rescale needs a positive dlogp")
+            if cts[0].logq - dlogp <= 0:
+                raise ValueError(
+                    f"rescale by {dlogp} exhausts the ciphertext "
+                    f"(logq {cts[0].logq}; needs bootstrapping)")
+        if op == "mod_down" and not 0 < logq2 <= cts[0].logq:
+            raise ValueError(
+                f"mod_down target logq2={logq2} outside (0, "
+                f"{cts[0].logq}]")
+        req = Request(rid=self._next_rid, op=op, cts=cts, r=r, dlogp=dlogp,
+                      logq2=logq2,
                       t_submit=time.perf_counter()
                       if t_submit is None else t_submit)
         self._next_rid += 1
         self._submitted += 1
+        self._arrivals.append(req.t_submit)
         self._buckets.setdefault(req.bucket_key, deque()).append(req)
         return req.rid
 
@@ -149,6 +215,29 @@ class RequestQueue:
             if d:
                 return k
         return None
+
+    def expired_key(self, max_age_s: float, now: float
+                    ) -> Optional[BucketKey]:
+        """The bucket whose HEAD request has waited longest past the age
+        deadline (None when nothing has expired). The head is always the
+        bucket's oldest request (FIFO), so this is exactly the per-bucket
+        oldest-request deadline of the continuous-batching policy."""
+        best, best_t = None, None
+        for k, d in self._buckets.items():
+            if d and now - d[0].t_submit >= max_age_s:
+                if best_t is None or d[0].t_submit < best_t:
+                    best, best_t = k, d[0].t_submit
+        return best
+
+    def arrival_rate(self) -> Optional[float]:
+        """Requests/second over the recent submit window (None until two
+        arrivals with distinct timestamps exist)."""
+        if len(self._arrivals) < 2:
+            return None
+        span = self._arrivals[-1] - self._arrivals[0]
+        if span <= 0:
+            return None
+        return (len(self._arrivals) - 1) / span
 
     def pop_bucket(self, key: BucketKey, max_n: int) -> List[Request]:
         """Dequeue up to max_n requests from one bucket, FIFO."""
@@ -190,7 +279,7 @@ class BatchAssembler:
             return np.stack(rows)
 
         arrays = {"ax1": stack("ax", 0), "bx1": stack("bx", 0)}
-        if key[0] == "mul":
+        if OPS[key[0]] == 2:
             arrays["ax2"] = stack("ax", 1)
             arrays["bx2"] = stack("bx", 1)
         return Batch(key=key, requests=list(requests), arrays=arrays,

@@ -1,33 +1,78 @@
 """HEServer: the composed serving runtime (queue → engine → metrics).
 
-Glues the four subsystem pieces into the request loop `launch.serve --he`
+Glues the subsystem pieces into the request loop `launch.serve --he`
 and `benchmarks/serve_he.py` drive:
 
-  submit(op, cts[, r])  →  RequestQueue buckets by (op, level)
-  poll()                →  assemble the oldest full bucket, run it on the
-                           mesh, record throughput/latency, return
-                           (rid, Ciphertext) results
-  drain()               →  flush remaining partial buckets with padding
+  submit(op, cts, ...)   →  RequestQueue buckets by (op, level, extra)
+  submit_circuit(ops, inputs)
+                         →  walk an op-DAG server-side with level
+                            tracking; nodes enter the same queue and
+                            batch with everyone else's requests
+  poll()                 →  release at most one batch, chosen by the
+                            flush policy: a bucket at the adaptive
+                            target ("full"), else — under an SLO — the
+                            bucket whose oldest request hit the age
+                            deadline ("age"), else, when flushing, the
+                            oldest non-empty bucket ("drain"); run it on
+                            the mesh (optionally double-buffered),
+                            record metrics, return (rid, Ciphertext)
+                            results
+  drain()                →  serve until queue + circuits + the in-flight
+                            step are all empty
 
 One HEServer owns one resident TableCache (tables built once at logQ,
 every level served as slices) and one OpEngine (one compiled step per
 (op, level) signature) — the serving design HEAX/Medha argue for: keys
-and tables stay resident, work streams through them.
+and tables stay resident, work streams through them, and the WHOLE
+ciphertext op set (mul, add/sub, rotate, conjugate, slot-sum, rescale,
+mod-down) runs server-side so a client submits an encrypted circuit once
+and gets one ciphertext back.
+
+Continuous batching (ROADMAP → this PR): with ``max_age_s`` set, a
+trickle of requests (arrival rate below the batch size) still meets the
+latency SLO — poll() releases a bucket the moment its oldest request has
+waited max_age_s, padding the batch. The bucket target itself adapts:
+it is sized to the arrivals one deadline-window is expected to gather
+(rate × max_age_s, clamped to [1, batch]), so at low rates the server
+stops waiting for a full batch it will never see. Without ``max_age_s``
+the old drain-only behavior is preserved (and so is its bug: a
+sub-batch trickle never flushes — tests/test_hserve.py keeps a
+regression test on both behaviors).
+
+Double buffering (``overlap=True``): poll() dispatches the new batch
+BEFORE blocking on the previous one, so host-side batch assembly +
+device_put overlap the in-flight device step and the engine never waits
+on the frontend. Results then arrive one poll late — submit→result
+still runs front-to-back in drain(), and benchmarks/serve_he.py reports
+the overlap-on/off drain-wall comparison.
 """
 
 from __future__ import annotations
 
+import math
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cipher import Ciphertext, EvalKey
 from repro.core.params import HEParams
-from repro.hserve.engine import OpEngine
+from repro.hserve.circuit import CircuitOp, validate_circuit
+from repro.hserve.engine import Inflight, OpEngine, slot_sum_rotations
 from repro.hserve.metrics import ServeMetrics
-from repro.hserve.queue import BatchAssembler, RequestQueue
+from repro.hserve.queue import Batch, BatchAssembler, RequestQueue
 from repro.hserve.tables import TableCache
 
 __all__ = ["HEServer"]
+
+
+class _CircuitState:
+    """One in-progress circuit: resolved values + submission bookkeeping."""
+
+    def __init__(self, cid: int, ops: List[CircuitOp],
+                 inputs: Dict[str, Ciphertext]):
+        self.cid = cid
+        self.ops = ops
+        self.values: Dict[Union[int, str], Ciphertext] = dict(inputs)
+        self.submitted: set = set()
 
 
 class HEServer:
@@ -37,14 +82,29 @@ class HEServer:
     evk:    evaluation key (required to serve "mul").
     rot_keys: {r: rotation key} (required for "rotate" r and for the
               doubling amounts of any "slot_sum").
+    conj_key: conjugation key (required to serve "conjugate").
     mesh:   device mesh (defaults to the host mesh); batch rides "data",
             CRT primes ride "model".
     batch:  fixed engine batch size — every trace is (batch, N, qlimbs).
+    max_age_s: latency SLO — flush a bucket once its oldest request has
+            waited this long (None keeps drain-only flushing).
+    adaptive_target: size the full-bucket target from the observed
+            arrival rate (rate × max_age_s, clamped to [1, batch]) so a
+            trickle flushes promptly; only active under max_age_s.
+    overlap: double-buffer batch assembly + device_put against the
+            in-flight engine step (results arrive one poll late).
+    clock:  time source for ages/latencies (injectable for deterministic
+            tests; defaults to time.perf_counter).
     """
 
     def __init__(self, params: HEParams, evk: Optional[EvalKey] = None,
-                 rot_keys: Optional[Dict[int, EvalKey]] = None, *,
+                 rot_keys: Optional[Dict[int, EvalKey]] = None,
+                 conj_key: Optional[EvalKey] = None, *,
                  mesh=None, batch: int = 8, use_kernels: bool = False,
+                 max_age_s: Optional[float] = None,
+                 adaptive_target: bool = True,
+                 overlap: bool = False,
+                 clock: Callable[[], float] = time.perf_counter,
                  **engine_knobs):
         if mesh is None:
             from repro.launch.mesh import make_host_mesh
@@ -52,29 +112,38 @@ class HEServer:
         self.params = params
         self.mesh = mesh
         self.batch = batch
-        self.cache = TableCache(params, evk, rot_keys)
+        self.max_age_s = max_age_s
+        self.adaptive_target = adaptive_target
+        self.overlap = overlap
+        self._clock = clock
+        self.cache = TableCache(params, evk, rot_keys, conj_key)
         self.engine = OpEngine(params, mesh, self.cache,
                                use_kernels=use_kernels, **engine_knobs)
         self.queue = RequestQueue()
         self.assembler = BatchAssembler(batch)
         self.metrics = ServeMetrics()
+        self._inflight: Optional[Inflight] = None
+        self._circuits: Dict[int, _CircuitState] = {}
+        self._node_of_rid: Dict[int, Tuple[int, int]] = {}
 
     # ---- request intake --------------------------------------------------
 
-    def submit(self, op: str, cts, r: int = 0) -> int:
+    def submit(self, op: str, cts, r: int = 0, dlogp: int = 0,
+               logq2: int = 0) -> int:
         """Enqueue one request; returns its rid (used to match results).
 
         Key availability is checked HERE, not at execution: a request
         the engine cannot serve must never enter the queue (it would
         fail mid-drain, after being popped, taking the batch's other
-        requests down with it).
+        requests down with it). rescale's dlogp defaults to params.logp.
         """
         if op == "mul":
             self.cache.evk()                  # raises when absent
         elif op == "rotate":
             self.cache.rot_key(r)             # raises when absent
+        elif op == "conjugate":
+            self.cache.conj_key()             # raises when absent
         elif op == "slot_sum":
-            from repro.hserve.engine import slot_sum_rotations
             first = cts[0] if isinstance(cts, (tuple, list)) else cts
             missing = [rr for rr in slot_sum_rotations(first.n_slots)
                        if rr not in self.cache.rotation_amounts]
@@ -82,48 +151,200 @@ class HEServer:
                 raise KeyError(
                     f"slot_sum over {first.n_slots} slots needs rotation "
                     f"keys {missing}; loaded: {self.cache.rotation_amounts}")
-        return self.queue.submit(op, cts, r=r)
+        elif op == "rescale" and dlogp == 0:
+            dlogp = self.params.logp          # negative falls through to
+                                              # the queue's ValueError
+        return self.queue.submit(op, cts, r=r, dlogp=dlogp, logq2=logq2,
+                                 t_submit=self._clock())
 
     def submit_mul(self, c1: Ciphertext, c2: Ciphertext) -> int:
         return self.submit("mul", (c1, c2))
 
+    def submit_add(self, c1: Ciphertext, c2: Ciphertext) -> int:
+        return self.submit("add", (c1, c2))
+
+    def submit_sub(self, c1: Ciphertext, c2: Ciphertext) -> int:
+        return self.submit("sub", (c1, c2))
+
     def submit_rotate(self, ct: Ciphertext, r: int) -> int:
         return self.submit("rotate", (ct,), r=r)
+
+    def submit_conjugate(self, ct: Ciphertext) -> int:
+        return self.submit("conjugate", (ct,))
 
     def submit_slot_sum(self, ct: Ciphertext) -> int:
         return self.submit("slot_sum", (ct,))
 
+    def submit_rescale(self, ct: Ciphertext,
+                       dlogp: Optional[int] = None) -> int:
+        return self.submit("rescale", (ct,), dlogp=dlogp or 0)
+
+    def submit_mod_down(self, ct: Ciphertext, logq2: int) -> int:
+        return self.submit("mod_down", (ct,), logq2=logq2)
+
+    # ---- circuits --------------------------------------------------------
+
+    def submit_circuit(self, ops: Sequence[CircuitOp],
+                       inputs: Dict[str, Ciphertext]) -> int:
+        """Submit a whole encrypted circuit; returns a cid whose result
+        (the LAST node's ciphertext) appears in poll()/drain() output
+        exactly like a plain request's.
+
+        The DAG is validated up front — (logq, logp) propagated through
+        every node from the input ciphertexts' metadata, key
+        availability checked per op — so an ill-formed circuit raises
+        here, before anything is enqueued. Nodes are then submitted as
+        their operands resolve: source nodes immediately, the rest as
+        batches complete, so concurrent circuits (and plain requests)
+        batch together whenever their (op, level) signatures align.
+        """
+        ops = list(ops)
+        meta = {name: (ct.logq, ct.logp) for name, ct in inputs.items()}
+        validate_circuit(ops, meta, self.params)
+        # key availability, up front — a node the engine cannot serve
+        # must never let ANY of the circuit enter the queue (it would
+        # fail mid-drain with siblings already submitted). Every op
+        # preserves its first operand's n_slots, so slot_sum key needs
+        # propagate through the (already-validated) arg references.
+        nslots: List[int] = []
+        for node in ops:
+            a = node.args[0]
+            nslots.append(inputs[a].n_slots if isinstance(a, str)
+                          else nslots[a])
+            if node.op == "mul":
+                self.cache.evk()
+            elif node.op == "rotate":
+                self.cache.rot_key(node.r)
+            elif node.op == "conjugate":
+                self.cache.conj_key()
+            elif node.op == "slot_sum":
+                missing = [rr for rr in slot_sum_rotations(nslots[-1])
+                           if rr not in self.cache.rotation_amounts]
+                if missing:
+                    raise KeyError(
+                        f"circuit slot_sum over {nslots[-1]} slots needs "
+                        f"rotation keys {missing}; loaded: "
+                        f"{self.cache.rotation_amounts}")
+        cid = self.queue.reserve_rid()
+        circ = _CircuitState(cid, ops, inputs)
+        self._circuits[cid] = circ
+        self._submit_ready(circ)
+        return cid
+
+    def _submit_ready(self, circ: _CircuitState) -> None:
+        """Enqueue every not-yet-submitted node whose operands are all
+        resolved (inputs or completed earlier nodes)."""
+        for i, node in enumerate(circ.ops):
+            if i in circ.submitted:
+                continue
+            try:
+                cts = tuple(circ.values[a] for a in node.args)
+            except KeyError:
+                continue                      # operands not ready yet
+            rid = self.submit(node.op, cts, r=node.r, dlogp=node.dlogp,
+                              logq2=node.logq2)
+            circ.submitted.add(i)
+            self._node_of_rid[rid] = (circ.cid, i)
+
+    def _feed_circuit(self, cid: int, node_idx: int, ct: Ciphertext
+                      ) -> List[Tuple[int, Ciphertext]]:
+        """Route one completed node result back into its circuit; returns
+        the client-visible (cid, result) pair when the circuit finishes."""
+        circ = self._circuits.get(cid)
+        if circ is None:                      # finished via its last node
+            return []                         # while a dangling node ran
+        circ.values[node_idx] = ct
+        if node_idx == len(circ.ops) - 1:
+            del self._circuits[cid]
+            return [(cid, ct)]
+        self._submit_ready(circ)
+        return []
+
     # ---- the serving loop ------------------------------------------------
 
+    def _bucket_target(self) -> int:
+        """Full-bucket release threshold. Fixed at `batch` without an
+        SLO; under one, sized to the arrivals a deadline window is
+        expected to gather so a trickle stops waiting for a full batch."""
+        if self.max_age_s is None or not self.adaptive_target:
+            return self.batch
+        rate = self.queue.arrival_rate()
+        if not rate:
+            return self.batch
+        return max(1, min(self.batch, math.ceil(rate * self.max_age_s)))
+
     def poll(self, flush: bool = False) -> List[Tuple[int, Ciphertext]]:
-        """Run at most one batch. Takes the oldest bucket holding a full
-        batch; with `flush`, takes the oldest non-empty bucket and pads.
-        Returns completed (rid, Ciphertext) pairs (empty if no work ran).
+        """Release + run at most one batch per the flush policy (full →
+        age → drain); returns completed (rid, Ciphertext) pairs (empty
+        if no work ran). With overlap, the dispatched batch's results
+        return on the NEXT poll; a poll with no new work retires the
+        in-flight batch instead of returning nothing.
         """
         self.metrics.record_depth(self.queue.depth)
-        key = self.queue.ready_key(self.batch)
+        now = self._clock()
+        key, cause = self.queue.ready_key(self._bucket_target()), "full"
+        if key is None and self.max_age_s is not None:
+            key, cause = self.queue.expired_key(self.max_age_s, now), "age"
         if key is None and flush:
-            key = self.queue.any_key()
+            key, cause = self.queue.any_key(), "drain"
         if key is None:
-            return []
+            return self._retire(self._take_inflight())
         reqs = self.queue.pop_bucket(key, self.batch)
         b = self.assembler.assemble(reqs)
-        self.engine.warm_batch(b)        # keep compile out of steady state
-        t0 = time.perf_counter()
-        outs = self.engine.run(b)
-        done = time.perf_counter()
+        self.metrics.record_flush(cause)
+        if self.overlap:
+            prev = self._take_inflight()
+            self._inflight = self.engine.dispatch(b)
+            return self._retire(prev)
+        outs, wall = self.engine.wait(self.engine.dispatch(b))
+        return self._complete(b, outs, wall)
+
+    def _take_inflight(self) -> Optional[Inflight]:
+        inf, self._inflight = self._inflight, None
+        return inf
+
+    def _retire(self, inf: Optional[Inflight]
+                ) -> List[Tuple[int, Ciphertext]]:
+        if inf is None:
+            return []
+        outs, wall = self.engine.wait(inf)
+        return self._complete(inf.batch, outs, wall)
+
+    def _complete(self, b: Batch, outs: List[Ciphertext], wall: float
+                  ) -> List[Tuple[int, Ciphertext]]:
+        """Account one finished batch and route results: circuit-node
+        rids feed their circuits (possibly enqueueing successor nodes);
+        everything else goes straight back to the client."""
+        done = self._clock()
         self.metrics.record_batch(
-            b.op, b.logq, b.n_valid, b.n_pad, done - t0,
+            b.op, b.logq, b.n_valid, b.n_pad, wall,
             [done - r.t_submit for r in b.requests])
-        return [(r.rid, ct) for r, ct in zip(b.requests, outs)]
+        client: List[Tuple[int, Ciphertext]] = []
+        for req, ct in zip(b.requests, outs):
+            tag = self._node_of_rid.pop(req.rid, None)
+            if tag is None:
+                client.append((req.rid, ct))
+            else:
+                client.extend(self._feed_circuit(*tag, ct))
+        return client
 
     def drain(self) -> Dict[int, Ciphertext]:
-        """Serve until the queue is empty (padding the stragglers);
-        returns {rid: result}."""
+        """Serve until the queue, every circuit, and the in-flight step
+        are all empty (padding the stragglers); returns {rid: result}
+        (circuit results under their cid)."""
         results: Dict[int, Ciphertext] = {}
-        while self.queue.depth:
-            for rid, ct in self.poll(flush=True):
+        while (self.queue.depth or self._inflight is not None
+               or self._circuits):
+            served = self.poll(flush=True)
+            for rid, ct in served:
                 results[rid] = ct
+            if (not served and not self.queue.depth
+                    and self._inflight is None):
+                if self._circuits:        # should be unreachable
+                    raise RuntimeError(
+                        f"circuit(s) {sorted(self._circuits)} stalled "
+                        "with no pending requests")
+                break
         return results
 
     # ---- accounting ------------------------------------------------------
@@ -142,5 +363,11 @@ class HEServer:
                        "compile_s": round(self.engine.compile_s, 3)},
             "mesh": dict(self.mesh.shape),
             "batch": self.batch,
+            "flush_policy": {
+                "max_age_s": self.max_age_s,
+                "adaptive_target": self.adaptive_target,
+                "bucket_target": self._bucket_target(),
+                "overlap": self.overlap,
+            },
             "submitted": self.queue.submitted,
         }

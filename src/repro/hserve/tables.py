@@ -14,14 +14,27 @@ So this cache:
   - caches the few genuinely per-np entries (the iCRT tables, which
     depend on P = ∏ first-np primes) keyed by np — shared across every
     level and region that lands on the same prime count;
-  - holds the evaluation key and any rotation keys as device pytrees in
-    `dist.he_pipeline.evk_tables` form (the engine slices key rows
-    ``[:np2]`` per level inside the step).
+  - holds the evaluation key, any rotation keys, and the conjugation key
+    as device pytrees in `dist.he_pipeline.evk_tables` form (the engine
+    slices key rows ``[:np2]`` per level inside the step). This is
+    Medha's resident-key design: every Galois key is just another
+    evk-shaped pytree riding the same region-2 machinery.
 
 The sliced pytrees are value-identical to a freshly built
 ``runtime_tables(make_context(params, logq), evk)`` at every level
 (tests/test_hserve.py asserts array equality), so serving from the cache
 cannot change a single output bit.
+
+A note on ``quot_fix`` (present in the region tables since the Pallas
+kernel routing landed): it is the table of ⌊β²/p_j⌋ as two β-bit limbs,
+one row per prime — the fixed-point reciprocal the TPU iCRT kernel uses
+to estimate the accumulator quotient where the reference path uses an
+f64 multiply (TPUs have no f64; see `kernels/icrt/icrt.py` and
+`IcrtTables.quot_fix` in `core/context.py`). Although it is built by
+``build_icrt_tables``, it depends only on the prime — not on
+P = ∏ primes — so unlike the other iCRT entries it row-slices from the
+resident set exactly like the prime-pool tables (``_ROW_KEYS`` below),
+and one resident copy serves every level and region.
 """
 
 from __future__ import annotations
@@ -51,7 +64,8 @@ class TableCache:
     """One resident device table set; per-level views by slicing."""
 
     def __init__(self, params: HEParams, evk: Optional[EvalKey] = None,
-                 rot_keys: Optional[Dict[int, EvalKey]] = None):
+                 rot_keys: Optional[Dict[int, EvalKey]] = None,
+                 conj_key: Optional[EvalKey] = None):
         self.params = params
         g = build_global_tables(params)
         top = build_icrt_tables(params, params.max_np)
@@ -79,6 +93,9 @@ class TableCache:
         self._rot = {
             int(r): {k: jnp.asarray(v) for k, v in evk_tables(rk).items()}
             for r, rk in (rot_keys or {}).items()}
+        self._conj = {k: jnp.asarray(v)
+                      for k, v in evk_tables(conj_key).items()} \
+            if conj_key is not None else None
         self.hits = 0
         self.misses = 0
 
@@ -131,6 +148,19 @@ class TableCache:
         self._rot[int(r)] = {
             k: jnp.asarray(v) for k, v in evk_tables(rk).items()}
 
+    def conj_key(self) -> Dict[str, jnp.ndarray]:
+        if self._conj is None:
+            raise ValueError(
+                "no conjugation key loaded (conjugate unavailable)")
+        return self._conj
+
+    def add_conj_key(self, ck: EvalKey) -> None:
+        self._conj = {k: jnp.asarray(v) for k, v in evk_tables(ck).items()}
+
+    @property
+    def has_conj_key(self) -> bool:
+        return self._conj is not None
+
     @property
     def rotation_amounts(self):
         return sorted(self._rot)
@@ -144,11 +174,13 @@ class TableCache:
                      for d in self._icrt_dev.values() for v in d.values())
         key_b = sum(int(v.size) * v.dtype.itemsize
                     for d in ([self._ek] if self._ek else [])
+                    + ([self._conj] if self._conj else [])
                     + list(self._rot.values()) for v in d.values())
         return {
             "levels_materialized": sorted(self._levels),
             "np_sets": sorted(self._icrt_dev),
             "rot_keys": self.rotation_amounts,
+            "conj_key": self.has_conj_key,
             "hits": self.hits,
             "misses": self.misses,
             "resident_mib": round(res_b / 2**20, 3),

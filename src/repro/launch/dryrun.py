@@ -237,6 +237,56 @@ def lower_he_cell(batch: int, mesh, *, logq=None) -> dict:
     return _analyze(lowered, compiled, time.time() - t0)
 
 
+# ops the serving engine adds on top of he_mul; lowered with abstract
+# he_table_specs tables (no multi-second twiddle build), exactly as the
+# engine jits them, so the collective matrix covers the full served set
+HE_SERVING_OPS = ("rotate", "slot_sum", "rescale")
+
+
+def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
+                          params=None) -> dict:
+    """Lower + compile one hserve engine step with abstract tables.
+
+    `rotate` and `slot_sum` consume the region-2 table spec plus
+    evk-shaped Galois key specs (rotation keys have exactly the evk
+    pytree shape); `rescale` consumes nothing but the ciphertext batch —
+    it is a pure limb shift, which is the point the analysis record
+    makes: zero collective bytes at any mesh size.
+    """
+    from repro.core.rotate import rotation_k
+    from repro.dist import he_pipeline as hp
+    from repro.dist.sharding import he_limb_sharding
+    from repro.hserve.engine import (
+        make_he_rotate_step, make_rescale_step, make_slot_sum_step,
+        slot_sum_rotations,
+    )
+    if params is None:
+        from repro.configs.heaan_mul import CONFIG as params
+    logq = params.logQ if logq is None else logq
+    st = hp.he_static(params, logq)
+    _, t2, ek = hp.he_table_specs(st)
+    ct_sh = he_limb_sharding(mesh, batch=batch)
+    ct = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype,
+                              sharding=ct_sh)
+    t0 = time.time()
+    if op == "rotate":
+        step = make_he_rotate_step(st, mesh, rotation_k(params, 1))
+        lowered = jax.jit(step).lower(t2, ek, ct, ct)
+    elif op == "slot_sum":
+        n_slots = params.n_slots_max
+        step = make_slot_sum_step(st, mesh, n_slots)
+        rks = tuple(ek for _ in slot_sum_rotations(n_slots))
+        lowered = jax.jit(step).lower(t2, rks, ct, ct)
+    elif op == "rescale":
+        step = make_rescale_step(st, mesh, params.logp)
+        lowered = jax.jit(step).lower(ct, ct)
+    else:
+        raise ValueError(f"unknown serving op {op!r}; "
+                         f"one of {HE_SERVING_OPS}")
+    compiled = lowered.compile()
+    return _analyze(lowered, compiled, time.time() - t0)
+
+
 # --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
@@ -263,6 +313,20 @@ def run_cells(archs, shapes, *, multipod: bool, he: bool, he_batches,
                 rec = {"cell": f"heaan_mul/he_mul_b{b}", "mesh": mesh_name}
                 try:
                     rec["analysis"] = lower_he_cell(b, mesh)
+                    rec["ok"] = True
+                except Exception as e:
+                    rec["ok"] = False
+                    rec["error"] = f"{type(e).__name__}: {e}"
+                    rec["traceback"] = traceback.format_exc()[-2000:]
+                emit(rec)
+            # the serving engine's op set (one batch size is enough for
+            # the collective matrix; slot_sum is log2(N/2) key switches)
+            for op in HE_SERVING_OPS:
+                rec = {"cell": f"heaan_mul/he_{op}_b{he_batches[0]}",
+                       "mesh": mesh_name}
+                try:
+                    rec["analysis"] = lower_he_serving_cell(
+                        op, he_batches[0], mesh)
                     rec["ok"] = True
                 except Exception as e:
                     rec["ok"] = False

@@ -5,7 +5,8 @@ repro.hserve runtime (queue → level-aware table cache → sharded engine).
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --preset smoke --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --he --batch 8 \
-        --requests 24 --levels 3 --rotations 4 [--kernels]
+        --requests 24 --levels 3 --rotations 4 --conjugations 2 \
+        [--circuit] [--max-age-s 0.05] [--overlap] [--kernels]
 
 Both paths place their state with repro.dist.sharding rules on the host
 mesh (whatever devices this process has), so the same driver scales from
@@ -44,21 +45,24 @@ def generate(params, cfg: ModelConfig, tokens, gen_steps: int,
 
 
 def serve_he(batch: int, requests: int = 0, levels: int = 1,
-             rotations: int = 0, model_shards: int = 1,
-             use_kernels: bool = False, seed: int = 0) -> dict:
+             rotations: int = 0, conjugations: int = 0,
+             model_shards: int = 1, use_kernels: bool = False,
+             max_age_s: float | None = None, overlap: bool = False,
+             circuit: bool = False, seed: int = 0) -> dict:
     """Batched multi-level HE serving over the repro.hserve runtime.
 
     Builds an HEServer (resident tables + jit-once engine on the host
-    mesh), submits a mixed stream of HE-Mul and rotate requests spread
-    over `levels` moduli, drains the queue with padded batching, and
-    verifies every decrypted result. Returns the server stats dict plus
-    a max_err field (printed by main).
+    mesh), submits a mixed stream of HE-Mul / rotate / conjugate
+    requests spread over `levels` moduli — plus, with `circuit`, a whole
+    degree-4 encrypted polynomial circuit via submit_circuit — drains
+    the queue with padded batching, and verifies every decrypted result.
+    Returns the server stats dict plus a max_err field (printed by main).
     """
     from repro.configs.heaan_mul import SMOKE
     from repro.core import heaan as H
     from repro.core.keys import keygen
-    from repro.core.rotate import rot_keygen
-    from repro.hserve import HEServer
+    from repro.core.rotate import conj_keygen, rot_keygen
+    from repro.hserve import HEServer, degree4_demo_circuit
     from repro.launch.mesh import make_host_mesh
 
     params = SMOKE
@@ -69,33 +73,45 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
         f"--levels must be in [1, {params.L - 1}]"
     sk, pk, evk = keygen(params, seed=0)
     rot_keys = {1: rot_keygen(params, sk, 1)} if rotations else {}
-    server = HEServer(params, evk, rot_keys,
+    conj_key = conj_keygen(params, sk) if conjugations or circuit else None
+    server = HEServer(params, evk, rot_keys, conj_key,
                       mesh=make_host_mesh(model=model_shards),
-                      batch=batch, use_kernels=use_kernels)
+                      batch=batch, use_kernels=use_kernels,
+                      max_age_s=max_age_s, overlap=overlap)
 
     rng = np.random.default_rng(seed)
     n = params.n_slots_max
     logqs = [params.logQ - i * params.logp for i in range(levels)]
-    expect = {}   # rid -> ("mul", z1*z2) | ("rotate", roll(z, -1))
-    n_mul = requests - rotations
-    assert n_mul >= 0, "--rotations cannot exceed --requests"
+    expect = {}   # rid -> (op, expected slots)
+    n_mul = requests - rotations - conjugations
+    assert n_mul >= 0, \
+        "--rotations + --conjugations cannot exceed --requests"
     for i in range(requests):
         logq = logqs[i % levels]
+        z = rng.normal(size=n) + 1j * rng.normal(size=n)
+        ct = H.encrypt_message(z, pk, params, seed=2 * i + 1)
+        if logq < params.logQ:
+            ct = H.he_mod_down(ct, params, logq)
         if i < n_mul:
-            z1 = rng.normal(size=n) + 1j * rng.normal(size=n)
             z2 = rng.normal(size=n) + 1j * rng.normal(size=n)
-            c1 = H.encrypt_message(z1, pk, params, seed=2 * i + 1)
             c2 = H.encrypt_message(z2, pk, params, seed=2 * i + 2)
             if logq < params.logQ:
-                c1 = H.he_mod_down(c1, params, logq)
                 c2 = H.he_mod_down(c2, params, logq)
-            expect[server.submit_mul(c1, c2)] = ("mul", z1 * z2)
-        else:
-            z = rng.normal(size=n) + 1j * rng.normal(size=n)
-            ct = H.encrypt_message(z, pk, params, seed=2 * i + 1)
-            if logq < params.logQ:
-                ct = H.he_mod_down(ct, params, logq)
+            expect[server.submit_mul(ct, c2)] = ("mul", z * z2)
+        elif i < n_mul + rotations:
             expect[server.submit_rotate(ct, 1)] = ("rotate", np.roll(z, -1))
+        else:
+            expect[server.submit_conjugate(ct)] = ("conjugate", np.conj(z))
+
+    if circuit:
+        # a degree-4 encrypted polynomial, evaluated WHOLLY server-side:
+        # conj(x⁴) + x — muls, rescales, a mod-down alignment, conjugate,
+        # and an add, all through one submit_circuit round trip
+        zc = rng.normal(size=n) + 1j * rng.normal(size=n)
+        x = H.encrypt_message(zc, pk, params, seed=7777)
+        ops, _ = degree4_demo_circuit(params)
+        cid = server.submit_circuit(ops, inputs={"x": x})
+        expect[cid] = ("circuit", np.conj(zc ** 4) + zc)
 
     results = server.drain()
     errs = []
@@ -132,6 +148,20 @@ def main():
     ap.add_argument("--rotations", type=int, default=0,
                     help="how many of the HE requests are rotate(r=1) "
                          "instead of mul")
+    ap.add_argument("--conjugations", type=int, default=0,
+                    help="how many of the HE requests are conjugate "
+                         "(σ₋₁ through the same key-switch machinery)")
+    ap.add_argument("--circuit", action="store_true",
+                    help="also submit a degree-4 encrypted polynomial "
+                         "circuit (mul → rescale → mod-down → conjugate "
+                         "→ add) via submit_circuit and verify it")
+    ap.add_argument("--max-age-s", type=float, default=None,
+                    help="continuous-batching SLO: flush a bucket once "
+                         "its oldest request has waited this long "
+                         "(default: drain-only flushing)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffer batch assembly + device_put "
+                         "against the in-flight engine step")
     ap.add_argument("--kernels", action="store_true",
                     help="route HE stages through the repro.kernels "
                          "Pallas paths (interpret mode off-TPU)")
@@ -142,8 +172,11 @@ def main():
     if args.he:
         stats = serve_he(args.batch, requests=args.requests,
                          levels=args.levels, rotations=args.rotations,
+                         conjugations=args.conjugations,
                          model_shards=args.model_shards,
-                         use_kernels=args.kernels)
+                         use_kernels=args.kernels,
+                         max_age_s=args.max_age_s, overlap=args.overlap,
+                         circuit=args.circuit)
         ops = ", ".join(
             f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
             f"(p50 {d['latency_ms']['p50']}ms, "

@@ -1,0 +1,51 @@
+"""Docs integrity as a tier-1 test: the same checks CI's docs step runs
+(tools/check_docs.py) — relative links in README.md/docs/*.md resolve,
+and the committed BENCH_serve_he.json matches the schema documented in
+docs/SERVING.md."""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_markdown_relative_links_resolve():
+    assert check_docs.check_links(REPO) == []
+
+
+def test_bench_serve_he_matches_documented_schema():
+    assert check_docs.check_bench(REPO) == []
+
+
+def test_checker_flags_broken_links_and_bad_bench(tmp_path):
+    """The checker itself must actually detect problems (a link-checker
+    that passes everything keeps CI green while docs rot)."""
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "[ok](docs/REAL.md) [broken](docs/NOPE.md) "
+        "[ext](https://example.com) [anchor](#sec)\n")
+    (tmp_path / "docs" / "REAL.md").write_text(
+        "[back](../README.md)\n[gone](missing.md)\n")
+    errs = check_docs.check_links(tmp_path)
+    assert len(errs) == 2
+    assert any("NOPE.md" in e for e in errs)
+    assert any("missing.md" in e for e in errs)
+
+    (tmp_path / "BENCH_serve_he.json").write_text("{not json")
+    assert any("invalid JSON" in e for e in check_docs.check_bench(tmp_path))
+    (tmp_path / "BENCH_serve_he.json").write_text(
+        '{"batch": "four", "trickle": {"requests": 1}}')
+    errs = check_docs.check_bench(tmp_path)
+    assert any("batch" in e and "expected int" in e for e in errs)
+    assert any("missing key 'overlap'" in e for e in errs)
+    assert any("trickle: missing key 'p50_ms'" in e for e in errs)
+
+
+def test_ci_runs_the_docs_step():
+    """The acceptance criterion says the link check runs in CI — pin the
+    workflow wiring so a refactor can't silently drop it."""
+    wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "tools/check_docs.py" in wf

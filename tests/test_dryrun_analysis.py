@@ -73,3 +73,76 @@ def test_model_flops_formulas():
     assert model_flops("kimi-k2-1t-a32b", "decode_32k") == \
         2.0 * 32.6e9 * 128
     assert model_flops("unknown-arch", "train_4k") is None
+
+
+# --------------------------------------------------------------------------
+# hserve serving steps: abstract-table lowering + collective analysis
+# (the dryrun --he serving cells, exercised in-process at test params —
+# launch.dryrun itself is never imported here, its import sets XLA_FLAGS)
+# --------------------------------------------------------------------------
+
+def _serving_lowered(op: str, batch: int = 2):
+    import jax
+
+    from repro.core.params import test_params
+    from repro.core.rotate import rotation_k
+    from repro.dist import he_pipeline as hp
+    from repro.dist.sharding import he_limb_sharding
+    from repro.hserve.engine import (
+        make_he_rotate_step, make_rescale_step, make_slot_sum_step,
+        slot_sum_rotations,
+    )
+
+    params = test_params(logN=4, beta_bits=32)
+    st = hp.he_static(params, params.logQ)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    _, t2, ek = hp.he_table_specs(st)         # abstract tables: no twiddle
+    ct_sh = he_limb_sharding(mesh, batch=batch)     # build, pure specs
+    ct = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype,
+                              sharding=ct_sh)
+    if op == "rotate":
+        step = make_he_rotate_step(st, mesh, rotation_k(params, 1))
+        return jax.jit(step).lower(t2, ek, ct, ct)
+    if op == "slot_sum":
+        n = params.n_slots_max
+        step = make_slot_sum_step(st, mesh, n)
+        rks = tuple(ek for _ in slot_sum_rotations(n))
+        return jax.jit(step).lower(t2, rks, ct, ct)
+    if op == "rescale":
+        step = make_rescale_step(st, mesh, params.logp)
+        return jax.jit(step).lower(ct, ct)
+    raise ValueError(op)
+
+
+def test_serving_steps_lower_with_abstract_tables():
+    """rotate / slot_sum / rescale lower + compile from he_table_specs
+    alone and produce a full analysis record (the dryrun --he serving
+    cells' contract)."""
+    from repro.launch.hlo_analysis import analyze_compiled
+
+    for op in ("rotate", "slot_sum", "rescale"):
+        lowered = _serving_lowered(op)
+        rec = analyze_compiled(lowered, lowered.compile(), 0.0)
+        assert set(rec) >= {"flops", "bytes_accessed", "collectives",
+                            "memory", "compile_seconds"}, op
+        assert rec["collectives"]["counts"] is not None, op
+        # single-device mesh: nothing should hit the wire
+        assert rec["collectives"]["total_bytes"] == 0.0, op
+
+
+def test_rescale_step_has_no_collectives_and_fewer_flops():
+    """Rescale is a pure limb shift — no NTT, no key switch: its HLO
+    must contain zero collectives and cost far less than a rotate (the
+    docs/ARCHITECTURE.md dataflow-table claim, checked on real HLO)."""
+    from repro.launch.hlo_analysis import (
+        analyze_compiled, collective_bytes_from_hlo,
+    )
+
+    rot = _serving_lowered("rotate")
+    res = _serving_lowered("rescale")
+    rec_rot = analyze_compiled(rot, rot.compile(), 0.0)
+    rec_res = analyze_compiled(res, res.compile(), 0.0)
+    # collective parser on the pre-partitioning HLO text as well
+    assert collective_bytes_from_hlo(res.as_text())["total_bytes"] == 0.0
+    if rec_rot["flops"] and rec_res["flops"]:
+        assert rec_res["flops"] < rec_rot["flops"] / 10

@@ -23,11 +23,12 @@ from repro.core import heaan as H
 from repro.core import test_params as small_params
 from repro.core.context import make_context
 from repro.core.keys import keygen
-from repro.core.rotate import he_rotate, rot_keygen
+from repro.core.rotate import conj_keygen, he_conjugate, he_rotate, \
+    rot_keygen
 from repro.dist import he_pipeline as hp
 from repro.hserve import (
-    BatchAssembler, HEServer, RequestQueue, ServeMetrics, TableCache,
-    slot_sum_rotations,
+    BatchAssembler, CircuitOp, HEServer, RequestQueue, ServeMetrics,
+    TableCache, degree4_demo_circuit, slot_sum_rotations, validate_circuit,
 )
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -40,6 +41,11 @@ def keys():
     sk, pk, evk = keygen(PARAMS, seed=0)
     rks = {r: rot_keygen(PARAMS, sk, r) for r in (1, 2, 4)}
     return sk, pk, evk, rks
+
+
+@pytest.fixture(scope="module")
+def ck(keys):
+    return conj_keygen(PARAMS, keys[0])
 
 
 def _enc(pk, seed, n=8):
@@ -203,10 +209,10 @@ def test_table_cache_keys_and_stats(keys):
 # engine parity vs core, through the composed server (1-device mesh)
 # --------------------------------------------------------------------------
 
-def _server(keys, **kw):
+def _server(keys, conj_key=None, **kw):
     _, _, evk, rks = keys
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    return HEServer(PARAMS, evk, rks, mesh=mesh, batch=2, **kw)
+    return HEServer(PARAMS, evk, rks, conj_key, mesh=mesh, batch=2, **kw)
 
 
 def test_served_mul_bitwise_equals_core_at_two_levels(keys):
@@ -281,6 +287,254 @@ def test_served_mul_with_kernels_bitwise(keys):
 
 
 # --------------------------------------------------------------------------
+# level-management ops (this PR): bitwise parity vs core
+# --------------------------------------------------------------------------
+
+def test_queue_validates_level_management_ops(keys):
+    _, pk, _, _ = keys
+    q = RequestQueue()
+    _, c1 = _enc(pk, 1)
+    low = H.he_mod_down(c1, PARAMS, PARAMS.logQ - PARAMS.logp)
+    resc = H.rescale(c1, PARAMS)              # different logp than c1
+    with pytest.raises(ValueError):
+        q.submit("rescale", (c1,), dlogp=0)   # needs a positive dlogp
+    with pytest.raises(ValueError):
+        q.submit("rescale", (c1,), dlogp=PARAMS.logQ)   # exhausted
+    with pytest.raises(ValueError):
+        q.submit("mod_down", (c1,), logq2=0)
+    with pytest.raises(ValueError):
+        q.submit("mod_down", (c1,), logq2=PARAMS.logQ + 1)
+    with pytest.raises(ValueError):
+        q.submit("add", (low, resc))          # scale mismatch
+    # distinct extras land in distinct buckets (trace signatures)
+    q.submit("rescale", (c1,), dlogp=PARAMS.logp)
+    q.submit("rescale", (c1,), dlogp=2 * PARAMS.logp)
+    q.submit("mod_down", (c1,), logq2=PARAMS.logQ - PARAMS.logp)
+    q.submit("conjugate", (c1,))
+    q.submit("add", (c1, c1))
+    q.submit("sub", (c1, c1))
+    assert len(q.bucket_depths()) == 6
+
+
+def test_served_level_ops_bitwise_equal_core(keys, ck):
+    """conjugate / rescale / mod_down / add / sub through the server are
+    bitwise identical to the single-device core references, with the
+    right output (logq, logp) metadata."""
+    _, pk, _, _ = keys
+    server = _server(keys, ck)
+    _, c1 = _enc(pk, 50)
+    _, c2 = _enc(pk, 51)
+    logq2 = PARAMS.logQ - PARAMS.logp
+    cases = [
+        (server.submit_conjugate(c1), he_conjugate(c1, ck, PARAMS)),
+        (server.submit_rescale(c1), H.rescale(c1, PARAMS)),
+        (server.submit_mod_down(c1, logq2),
+         H.he_mod_down(c1, PARAMS, logq2)),
+        (server.submit_add(c1, c2), H.he_add(c1, c2)),
+        (server.submit_sub(c1, c2), H.he_sub(c1, c2)),
+    ]
+    res = server.drain()
+    for rid, ref in cases:
+        out = res[rid]
+        assert out.logq == ref.logq and out.logp == ref.logp
+        np.testing.assert_array_equal(np.asarray(out.ax),
+                                      np.asarray(ref.ax))
+        np.testing.assert_array_equal(np.asarray(out.bx),
+                                      np.asarray(ref.bx))
+
+
+def test_conjugate_requires_key(keys):
+    _, pk, _, _ = keys
+    server = _server(keys)                    # no conjugation key
+    _, c1 = _enc(pk, 1)
+    with pytest.raises(ValueError):
+        server.submit_conjugate(c1)
+    assert server.queue.depth == 0
+
+
+# --------------------------------------------------------------------------
+# circuits: server-side op-DAG walk with level tracking
+# --------------------------------------------------------------------------
+
+def _degree4_reference(x, evk, ck):
+    r0 = H.rescale(H.he_mul(x, x, evk, PARAMS), PARAMS)
+    r1 = H.rescale(H.he_mul(r0, r0, evk, PARAMS), PARAMS)
+    logq_md = PARAMS.logQ - 3 * PARAMS.logp
+    r2 = he_conjugate(H.he_mod_down(r1, PARAMS, logq_md), ck, PARAMS)
+    return H.he_add(r2, H.he_mod_down(x, PARAMS, logq_md))
+
+
+def test_circuit_degree4_bitwise_equals_core(keys, ck):
+    """The acceptance circuit: a degree-4 encrypted polynomial submitted
+    ONCE via submit_circuit, evaluated wholly server-side, decrypting
+    bitwise-identical to the composed single-device core reference."""
+    sk, pk, evk, _ = keys
+    server = _server(keys, ck)
+    z, x = _enc(pk, 99)
+    ops, _ = degree4_demo_circuit(PARAMS)
+    cid = server.submit_circuit(ops, {"x": x})
+    out = server.drain()[cid]
+    ref = _degree4_reference(x, evk, ck)
+    assert out.logq == ref.logq and out.logp == ref.logp
+    np.testing.assert_array_equal(np.asarray(out.ax), np.asarray(ref.ax))
+    np.testing.assert_array_equal(np.asarray(out.bx), np.asarray(ref.bx))
+    got = H.decrypt_message(out, sk, PARAMS)
+    np.testing.assert_allclose(got, np.conj(z ** 4) + z, atol=0.3)
+    assert not server._circuits                # bookkeeping fully drained
+    assert not server._node_of_rid
+
+
+def test_concurrent_circuits_batch_together(keys, ck):
+    """Two identical circuits submitted together share (op, level)
+    signatures node-for-node, so their nodes batch pairwise (batch=2):
+    no padded lanes anywhere."""
+    _, pk, evk, _ = keys
+    server = _server(keys, ck)
+    _, x1 = _enc(pk, 60)
+    _, x2 = _enc(pk, 61)
+    ops, _ = degree4_demo_circuit(PARAMS)
+    c1 = server.submit_circuit(ops, {"x": x1})
+    c2 = server.submit_circuit(ops, {"x": x2})
+    res = server.drain()
+    for cid, x in ((c1, x1), (c2, x2)):
+        ref = _degree4_reference(x, evk, ck)
+        np.testing.assert_array_equal(np.asarray(res[cid].ax),
+                                      np.asarray(ref.ax))
+    for op, d in server.stats()["per_op"].items():
+        assert d["pad_frac"] == 0.0, f"{op} padded despite lockstep"
+
+
+def test_circuit_validation_rejects_before_enqueue(keys, ck):
+    """Level tracking catches ill-formed circuits up front — nothing may
+    enter the queue for a circuit that cannot complete."""
+    _, pk, _, _ = keys
+    server = _server(keys, ck)
+    _, x = _enc(pk, 1)
+    meta = {"x": (x.logq, x.logp)}
+    # static validator: level/scale propagation
+    with pytest.raises(ValueError, match="exhausts"):
+        validate_circuit([CircuitOp("rescale", ("x",),
+                                    dlogp=PARAMS.logQ)], meta, PARAMS)
+    with pytest.raises(ValueError, match="levels differ"):
+        validate_circuit([CircuitOp("mod_down", ("x",),
+                                    logq2=PARAMS.logQ - PARAMS.logp),
+                          CircuitOp("add", (0, "x"))], meta, PARAMS)
+    with pytest.raises(ValueError, match="scales differ"):
+        validate_circuit([CircuitOp("mul", ("x", "x")),
+                          CircuitOp("add", (0, "x"))], meta, PARAMS)
+    with pytest.raises(ValueError, match="not an earlier node"):
+        validate_circuit([CircuitOp("conjugate", (1,)),
+                          CircuitOp("conjugate", (0,))], meta, PARAMS)
+    with pytest.raises(ValueError, match="unknown input"):
+        validate_circuit([CircuitOp("conjugate", ("y",))], meta, PARAMS)
+    with pytest.raises(ValueError, match="negative rescale"):
+        validate_circuit([CircuitOp("rescale", ("x",), dlogp=-8)],
+                         meta, PARAMS)
+    # the server wires metadata + key checks into submit_circuit
+    for bad in ([CircuitOp("mul", ("x", "x")),
+                 CircuitOp("add", (0, "x"))],       # scale mismatch
+                [CircuitOp("rotate", ("x",), r=3)]):  # no key for r=3
+        with pytest.raises((ValueError, KeyError)):
+            server.submit_circuit(bad, {"x": x})
+    # slot_sum key availability is checked up front too — through node
+    # references (n_slots propagates), and before ANY sibling enqueues
+    no_keys = _server((keys[0], keys[1], keys[2], {}))  # evk, no rot keys
+    with pytest.raises(KeyError, match="slot_sum"):
+        no_keys.submit_circuit(
+            [CircuitOp("mod_down", ("x",),
+                       logq2=PARAMS.logQ - PARAMS.logp),
+             CircuitOp("slot_sum", (0,))], {"x": x})
+    assert server.queue.depth == 0
+    assert no_keys.queue.depth == 0
+    assert not no_keys._circuits
+
+
+# --------------------------------------------------------------------------
+# continuous batching: age-based flush under a trickle (fake clock)
+# --------------------------------------------------------------------------
+
+def test_poll_trickle_regression_without_age_policy(keys):
+    """The PR-2 bug this PR's policy subsumes: with drain-only flushing,
+    a sub-batch trickle sits in the queue forever under poll()."""
+    _, pk, _, _ = keys
+    server = _server(keys)                    # max_age_s=None
+    _, c1 = _enc(pk, 5)
+    _, c2 = _enc(pk, 6)
+    server.submit_mul(c1, c2)
+    for _ in range(5):
+        assert server.poll() == []            # never served
+    assert server.queue.depth == 1
+
+
+def test_trickle_served_within_age_deadline_fake_clock(keys):
+    """With max_age_s set, a lone request is flushed (padded) the moment
+    its age crosses the deadline — deterministic via an injected clock."""
+    _, pk, _, _ = keys
+    now = [0.0]
+    server = _server(keys, max_age_s=5.0, adaptive_target=False,
+                     clock=lambda: now[0])
+    _, c1 = _enc(pk, 5)
+    _, c2 = _enc(pk, 6)
+    rid = server.submit_mul(c1, c2)           # t_submit = 0.0
+    assert server.poll() == []                # age 0 < 5: keep waiting
+    now[0] = 4.9
+    assert server.poll() == []                # still under the deadline
+    now[0] = 5.0
+    done = server.poll()                      # deadline hit: padded flush
+    assert [r for r, _ in done] == [rid]
+    s = server.stats()
+    assert s["flushes"] == {"full": 0, "age": 1, "drain": 0}
+    assert s["per_op"]["mul"]["pad_frac"] == 0.5
+    # latency is measured on the same clock: submit 0.0 → complete 5.0
+    assert s["per_op"]["mul"]["latency_ms"]["p50"] == pytest.approx(5000.0)
+
+
+def test_adaptive_bucket_target_flushes_below_batch(keys):
+    """At a low observed arrival rate the full-bucket target shrinks to
+    rate × max_age_s, so a bucket that will never fill stops waiting."""
+    _, _, evk, rks = keys
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    now = [0.0]
+    server = HEServer(PARAMS, evk, rks, mesh=mesh, batch=4,
+                      max_age_s=2.0, clock=lambda: now[0])
+    _, c1 = _enc(keys[1], 5)
+    _, c2 = _enc(keys[1], 6)
+    server.submit_mul(c1, c2)                 # t = 0
+    now[0] = 1.0
+    server.submit_mul(c1, c2)                 # t = 1 → rate 1/s
+    # target = ceil(1/s × 2s) = 2 < batch=4: the 2-deep bucket is "full"
+    assert server._bucket_target() == 2
+    done = server.poll()
+    assert len(done) == 2
+    assert server.stats()["flushes"]["full"] == 1
+
+
+# --------------------------------------------------------------------------
+# double buffering: overlap mode stays bitwise and drains clean
+# --------------------------------------------------------------------------
+
+def test_overlap_drain_bitwise_and_clean(keys):
+    """overlap=True returns results one poll late but drain() retires
+    everything; outputs stay bitwise identical to core."""
+    _, pk, evk, _ = keys
+    server = _server(keys, overlap=True)
+    cases = []
+    for i in range(5):                        # 3 batches at batch=2 (pad 1)
+        _, c1 = _enc(pk, 70 + 2 * i)
+        _, c2 = _enc(pk, 71 + 2 * i)
+        cases.append((server.submit_mul(c1, c2),
+                      H.he_mul(c1, c2, evk, PARAMS)))
+    res = server.drain()
+    assert server._inflight is None
+    assert len(res) == 5
+    for rid, ref in cases:
+        np.testing.assert_array_equal(np.asarray(res[rid].ax),
+                                      np.asarray(ref.ax))
+        np.testing.assert_array_equal(np.asarray(res[rid].bx),
+                                      np.asarray(ref.bx))
+
+
+# --------------------------------------------------------------------------
 # metrics
 # --------------------------------------------------------------------------
 
@@ -348,20 +602,24 @@ def _run_subprocess(body: str) -> dict:
 
 
 def test_hserve_ops_bitwise_on_8_device_mesh():
-    """Sharded hserve mul + rotate + slot_sum on a (2, 4) mesh are
-    bitwise identical to the core references at two served levels."""
+    """Sharded hserve mul + rotate + conjugate + slot_sum — and the
+    whole degree-4 submit_circuit chain (mul → rescale → mod-down →
+    conjugate → add) — on a (2, 4) mesh are bitwise identical to the
+    core references across the served levels."""
     res = _run_subprocess("""
         from repro.core import heaan as H
         from repro.core import test_params
         from repro.core.keys import keygen
-        from repro.core.rotate import he_rotate, rot_keygen
+        from repro.core.rotate import conj_keygen, he_conjugate, \
+            he_rotate, rot_keygen
         from repro.hserve import HEServer, slot_sum_rotations
 
         params = test_params(logN=5, beta_bits=32)
         sk, pk, evk = keygen(params, seed=0)
         rks = {r: rot_keygen(params, sk, r) for r in (1, 2, 4, 8)}
+        ckey = conj_keygen(params, sk)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        server = HEServer(params, evk, rks, mesh=mesh, batch=2)
+        server = HEServer(params, evk, rks, ckey, mesh=mesh, batch=2)
 
         rng = np.random.default_rng(7)
         n = 16
@@ -384,11 +642,25 @@ def test_hserve_ops_bitwise_on_8_device_mesh():
         low = H.he_mod_down(ct, params, logq2)
         cases.append((server.submit_rotate(low, 2),
                       he_rotate(low, 2, rks[2], params)))
+        cases.append((server.submit_conjugate(ct),
+                      he_conjugate(ct, ckey, params)))
         cs = enc(40)
         acc = cs
         for r in slot_sum_rotations(cs.n_slots):
             acc = H.he_add(acc, he_rotate(acc, r, rks[r], params))
         cases.append((server.submit_slot_sum(cs), acc))
+
+        # degree-4 polynomial circuit, wholly server-side on the mesh
+        # (the same shared acceptance circuit serve --circuit runs)
+        from repro.hserve import degree4_demo_circuit
+        x = enc(50)
+        ops, lq = degree4_demo_circuit(params)
+        cid = server.submit_circuit(ops, inputs={"x": x})
+        r0 = H.rescale(H.he_mul(x, x, evk, params), params)
+        r1 = H.rescale(H.he_mul(r0, r0, evk, params), params)
+        r2 = he_conjugate(H.he_mod_down(r1, params, lq), ckey, params)
+        cases.append((cid, H.he_add(
+            r2, H.he_mod_down(x, params, lq))))
 
         res = server.drain()
         ok = all(
@@ -401,6 +673,6 @@ def test_hserve_ops_bitwise_on_8_device_mesh():
             "steps": server.stats()["engine"]["steps_compiled"]}))
     """)
     assert res["devices"] == 8
-    assert res["steps"] >= 5
-    assert len(res["levels"]) == 2
+    assert res["steps"] >= 8
+    assert len(res["levels"]) >= 3
     assert res["ok"], "sharded hserve op diverged from core reference"

@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Docs CI check: relative-link integrity + BENCH_serve_he.json schema.
+
+Two checks, no dependencies beyond the stdlib (CI runs this before the
+test install finishes, and the driver repo bans new deps):
+
+  1. Every relative markdown link in README.md and docs/*.md must point
+     at an existing file (anchors and absolute http(s)/mailto links are
+     skipped; intra-file `#fragment` links are skipped).
+  2. BENCH_serve_he.json must match the schema documented in
+     docs/SERVING.md — required keys with the right JSON types, including
+     the `trickle` and `overlap` blocks this PR's benchmark emits.
+
+Exit code 0 = clean; 1 = problems (each printed on its own line).
+
+    python tools/check_docs.py [--repo PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images' leading ! is unnecessary (same rule)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+NUM = (int, float)
+
+# BENCH_serve_he.json required keys → expected JSON types
+# (documented in docs/SERVING.md; keep the two in sync)
+BENCH_SCHEMA = {
+    "params": dict,
+    "batch": int,
+    "levels": list,
+    "use_kernels": bool,
+    "mesh": dict,
+    "requests": dict,
+    "mul_per_s": NUM,
+    "rotate_per_s": NUM,
+    "latency_ms": dict,
+    "pad_frac": dict,
+    "queue_depth": dict,
+    "cache": dict,
+    "compile_s": NUM,
+    "steps_compiled": int,
+    "setup_s": dict,
+    "drain_wall_s": NUM,
+    "trickle": dict,
+    "overlap": dict,
+}
+PARAMS_KEYS = ("logN", "logQ", "logp", "beta_bits")
+TRICKLE_SCHEMA = {"requests": int, "max_age_s": NUM, "p50_ms": NUM,
+                  "p99_ms": NUM, "age_flushes": int}
+OVERLAP_SCHEMA = {"muls": int, "off_drain_s": NUM, "on_drain_s": NUM,
+                  "speedup": NUM}
+
+
+def check_links(repo: Path) -> list:
+    errors = []
+    md_files = [repo / "README.md"] + sorted((repo / "docs").glob("*.md"))
+    for md in md_files:
+        if not md.exists():
+            errors.append(f"{md.relative_to(repo)}: file missing")
+            continue
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in _LINK_RE.findall(line):
+                if re.match(r"^[a-z]+:", target) or target.startswith("#"):
+                    continue                   # external / in-page anchor
+                path = target.split("#", 1)[0]
+                if not (md.parent / path).exists():
+                    errors.append(
+                        f"{md.relative_to(repo)}:{lineno}: broken relative "
+                        f"link -> {target}")
+    return errors
+
+
+def _check_block(obj: dict, schema: dict, where: str) -> list:
+    errors = []
+    for key, typ in schema.items():
+        if key not in obj:
+            errors.append(f"{where}: missing key {key!r}")
+        elif not isinstance(obj[key], typ) or (
+                typ is not bool and isinstance(obj[key], bool)):
+            errors.append(
+                f"{where}.{key}: expected "
+                f"{getattr(typ, '__name__', typ)}, got "
+                f"{type(obj[key]).__name__}")
+    return errors
+
+
+def check_bench(repo: Path) -> list:
+    bench = repo / "BENCH_serve_he.json"
+    if not bench.exists():
+        return [f"{bench.name}: file missing"]
+    try:
+        obj = json.loads(bench.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{bench.name}: invalid JSON ({e})"]
+    errors = _check_block(obj, BENCH_SCHEMA, bench.name)
+    if isinstance(obj.get("params"), dict):
+        for k in PARAMS_KEYS:
+            if k not in obj["params"]:
+                errors.append(f"{bench.name}.params: missing key {k!r}")
+    if isinstance(obj.get("trickle"), dict):
+        errors += _check_block(obj["trickle"], TRICKLE_SCHEMA,
+                               f"{bench.name}.trickle")
+    if isinstance(obj.get("overlap"), dict):
+        errors += _check_block(obj["overlap"], OVERLAP_SCHEMA,
+                               f"{bench.name}.overlap")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--repo", default=Path(__file__).resolve().parent.parent,
+                    type=Path, help="repo root (default: this file's ../)")
+    args = ap.parse_args(argv)
+    errors = check_links(args.repo) + check_bench(args.repo)
+    for e in errors:
+        print(e)
+    if not errors:
+        print("docs OK: links resolve, BENCH_serve_he.json matches the "
+              "documented schema")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
