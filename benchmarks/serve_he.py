@@ -10,7 +10,15 @@ additions, schema documented in docs/SERVING.md):
     the batch size and only the age-based flush policy (max_age_s) gets
     requests served at all — the continuous-batching SLO path;
   - "overlap": drain wall time for the same mul stream with the
-    double-buffered host↔device pipeline off vs on, and the speedup.
+    double-buffered host↔device pipeline off vs on, and the speedup;
+  - "plain": steady-state mul_plain/add_plain throughput — the
+    plaintext-operand ops (encode-only operand, region 1 only, NO key
+    switch) encrypted-inference affine layers ride;
+  - "scheduler": the circuit-aware scheduler A/B — two degree-4
+    circuits submitted one engine batch out of phase, drained with
+    scheduling off vs on: cross-circuit co-batch rate, mul padding
+    fraction, deferral/prefetch counts, and a bitwise-identical guard
+    (scheduling must never change a result bit).
 
     PYTHONPATH=src python benchmarks/serve_he.py                # quick
     PYTHONPATH=src python benchmarks/serve_he.py --full         # Table III
@@ -40,16 +48,17 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
 
     from repro.core import heaan as H
     from repro.core.keys import keygen
-    from repro.core.rotate import rot_keygen
-    from repro.hserve import HEServer
+    from repro.core.rotate import conj_keygen, rot_keygen
+    from repro.hserve import HEServer, degree4_demo_circuit
     from repro.launch.mesh import make_host_mesh
 
     t0 = time.perf_counter()
     sk, pk, evk = keygen(params, seed=0)
     rot_keys = {1: rot_keygen(params, sk, 1)} if rot_requests else {}
+    conj_key = conj_keygen(params, sk)    # the degree-4 scheduler A/B
     keygen_s = time.perf_counter() - t0
 
-    server = HEServer(params, evk, rot_keys,
+    server = HEServer(params, evk, rot_keys, conj_key,
                       mesh=make_host_mesh(model=model_shards),
                       batch=batch, use_kernels=use_kernels)
 
@@ -109,6 +118,61 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
     on_s = overlap_drain(True)
     server.overlap = False
 
+    # ---- plaintext-operand ops: region-1-only throughput ----------------
+    server.reset_metrics()
+    plain_requests = 2 * batch
+    pts = [H.encode_plain(
+        np.asarray(rng.normal(size=n) + 1j * rng.normal(size=n)),
+        params, params.logQ) for _ in range(2)]
+    for i in range(plain_requests):
+        ct = top[i % len(top)]
+        server.submit_mul_plain(ct, pts[i % 2])
+        server.submit_add_plain(ct, pts[i % 2])
+    server.drain()
+    pl = server.stats()["per_op"]
+
+    # ---- scheduler A/B: two degree-4 circuits, one batch out of phase --
+    ops4, _ = degree4_demo_circuit(params)
+
+    def staggered_circuits(schedule: bool):
+        server.schedule = schedule
+        server.reset_metrics()    # new window (zeroes scheduler counters)
+        # baseline AFTER the reset, so the deltas stay per-phase even if
+        # reset_metrics ever stops zeroing the scheduler counters
+        d0, p0 = server.scheduler.deferrals, server.scheduler.prefetches
+        res = {}
+        c1 = server.submit_circuit(ops4, {"x": top[0]})
+        res.update(dict(server.poll(flush=True)))   # desync the pair
+        c2 = server.submit_circuit(ops4, {"x": top[1 % len(top)]})
+        t0 = time.perf_counter()
+        res.update(server.drain())
+        wall = time.perf_counter() - t0
+        s = server.stats()
+        return {
+            "drain_s": round(wall, 4),
+            "batches": sum(d["batches"] for d in s["per_op"].values()),
+            "mul_pad_frac": s["per_op"]["mul"]["pad_frac"],
+            "cross_circuit_batches":
+                s["cobatch"]["cross_circuit_batches"],
+            "cross_circuit_rate": s["cobatch"]["cross_circuit_rate"],
+            "deferrals": server.scheduler.deferrals - d0,
+            "prefetches": server.scheduler.prefetches - p0,
+        }, (res[c1], res[c2])
+
+    # warm pass runs SCHEDULED on the cold circuit levels, so the table
+    # prefetches it reports are the real cold-cache ones (hidden behind
+    # in-flight batches); the timed A/B that follows is fully warm
+    warm, _ = staggered_circuits(True)
+    unsched, outs_u = staggered_circuits(False)
+    sched, outs_s = staggered_circuits(True)
+    server.schedule = False
+    sched["prefetches_cold"] = warm["prefetches"]
+    bitwise = all(
+        bool((np.asarray(a.ax) == np.asarray(b.ax)).all()
+             and (np.asarray(a.bx) == np.asarray(b.bx)).all())
+        for a, b in zip(outs_u, outs_s))
+    assert bitwise, "scheduling changed a result bit"
+
     # ---- trickle: arrival rate < batch; only the age policy flushes.
     # adaptive_target is disabled here on purpose: with it on, a trickle
     # is released the moment the target shrinks to the arrival rate and
@@ -159,6 +223,22 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
             "off_drain_s": round(off_s, 4),
             "on_drain_s": round(on_s, 4),
             "speedup": round(off_s / on_s, 3) if on_s > 0 else 0.0,
+        },
+        "plain": {
+            "requests": 2 * plain_requests,
+            "mul_plain_per_s": pl["mul_plain"]["ops_per_s"],
+            "add_plain_per_s": pl["add_plain"]["ops_per_s"],
+            "mul_plain_vs_mul": round(
+                pl["mul_plain"]["ops_per_s"]
+                / per_op["mul"]["ops_per_s"], 3)
+            if per_op.get("mul", {}).get("ops_per_s") else 0.0,
+        },
+        "scheduler": {
+            "circuits": 2,
+            "lookahead": server.scheduler.lookahead,
+            "unscheduled": unsched,
+            "scheduled": sched,
+            "bitwise_identical": bitwise,
         },
     }
 

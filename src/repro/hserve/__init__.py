@@ -22,7 +22,14 @@ levels (§III-A). `repro.hserve` is that design in JAX/GSPMD, layered on
     steps, bitwise identical to the single-device `core` references,
     with async dispatch/wait for double buffering.
   - :mod:`repro.hserve.circuit` — encrypted-circuit op-DAG (CircuitOp)
-    + the (logq, logp) level-tracking validator.
+    + the (logq, logp) level-tracking validator and the per-node bucket
+    key schedule (`circuit_schedule`).
+  - :mod:`repro.hserve.scheduler` — circuit-aware scheduler: looks
+    ahead at registered circuits' level schedules to co-batch
+    same-(op, level) nodes ACROSS circuits (deferring under-full drain
+    flushes for siblings within a lookahead horizon, with a progress
+    guarantee) and to prefetch the next levels' table slices behind the
+    in-flight batch.
   - :mod:`repro.hserve.metrics` — steady-state throughput / latency /
     queue-depth / flush-cause accounting.
   - :mod:`repro.hserve.server`  — :class:`HEServer`, the composed loop:
@@ -66,9 +73,11 @@ Plain per-op serving and the CLI driver still work::
 See docs/SERVING.md for the lifecycle and every knob.
 """
 
-from repro.hserve import circuit, engine, metrics, queue, tables  # noqa: F401
+from repro.hserve import (  # noqa: F401
+    circuit, engine, metrics, queue, scheduler, tables,
+)
 from repro.hserve.circuit import (  # noqa: F401
-    CircuitOp, degree4_demo_circuit, validate_circuit,
+    CircuitOp, circuit_schedule, degree4_demo_circuit, validate_circuit,
 )
 from repro.hserve.engine import (  # noqa: F401
     Inflight, OpEngine, slot_sum_rotations,
@@ -77,12 +86,14 @@ from repro.hserve.metrics import ServeMetrics  # noqa: F401
 from repro.hserve.queue import (  # noqa: F401
     Batch, BatchAssembler, Request, RequestQueue,
 )
+from repro.hserve.scheduler import CircuitScheduler  # noqa: F401
 from repro.hserve.server import HEServer  # noqa: F401
 from repro.hserve.tables import TableCache  # noqa: F401
 
 __all__ = [
     "HEServer", "OpEngine", "TableCache", "ServeMetrics",
     "Request", "Batch", "RequestQueue", "BatchAssembler",
-    "CircuitOp", "validate_circuit", "degree4_demo_circuit", "Inflight",
+    "CircuitOp", "validate_circuit", "circuit_schedule",
+    "degree4_demo_circuit", "Inflight", "CircuitScheduler",
     "slot_sum_rotations",
 ]

@@ -24,12 +24,15 @@ out-of-range modulus, forward references, or unknown ops.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.core.params import HEParams
-from repro.hserve.queue import OPS
+from repro.hserve.queue import OPS, PLAIN_OPS
 
-__all__ = ["CircuitOp", "validate_circuit", "degree4_demo_circuit"]
+__all__ = ["CircuitOp", "validate_circuit", "circuit_schedule",
+           "degree4_demo_circuit"]
 
 NodeRef = Union[int, str]
 
@@ -61,12 +64,17 @@ class CircuitOp:
     """One node of an encrypted circuit.
 
     op:    any served op ("mul", "add", "sub", "rotate", "conjugate",
-           "slot_sum", "rescale", "mod_down").
+           "slot_sum", "rescale", "mod_down", "mul_plain", "add_plain").
     args:  operand references — a str names a client input, an int the
            output of an earlier node (0-based index into the op list).
     r:     left-rotation amount ("rotate" only).
     dlogp: scale drop for "rescale" (0 → params.logp).
     logq2: target modulus for "mod_down".
+    pt:    encoded plaintext operand for "mul_plain"/"add_plain" —
+           (N, qlimbs) mod-q limbs at the node's input level
+           (core.heaan.encode_plain); excluded from equality/repr.
+    pt_logp: the plaintext's scale (mul_plain: 0 → params.log_delta;
+           add_plain: must match the ciphertext's logp, 0 → assumed to).
     """
 
     op: str
@@ -74,6 +82,9 @@ class CircuitOp:
     r: int = 0
     dlogp: int = 0
     logq2: int = 0
+    pt: Optional[np.ndarray] = dataclasses.field(
+        default=None, compare=False, repr=False)
+    pt_logp: int = 0
 
 
 def validate_circuit(ops: List[CircuitOp],
@@ -118,6 +129,28 @@ def validate_circuit(ops: List[CircuitOp],
                 f"({[m[0] for m in ms]}); mod_down first (paper §III-B)")
         if node.op == "mul":
             logp = ms[0][1] + ms[1][1]
+        elif node.op in PLAIN_OPS:
+            if node.pt is None:
+                raise ValueError(
+                    f"node {i}: {node.op} needs an encoded plaintext "
+                    f"operand (core.heaan.encode_plain)")
+            shape = np.asarray(node.pt).shape
+            if len(shape) != 2 or shape[0] != params.N \
+                    or shape[1] < params.qlimbs(logq):
+                raise ValueError(
+                    f"node {i}: {node.op} plaintext shape {shape} does "
+                    f"not cover ({params.N}, {params.qlimbs(logq)}) — "
+                    f"encode at the node's input level 2^{logq}")
+            if node.op == "mul_plain":
+                if node.pt_logp < 0:
+                    raise ValueError(
+                        f"node {i}: negative mul_plain pt_logp "
+                        f"{node.pt_logp} (0 means params.log_delta)")
+                logp += node.pt_logp or params.log_delta
+            elif node.pt_logp and node.pt_logp != logp:
+                raise ValueError(
+                    f"node {i}: add_plain operand scales differ "
+                    f"(plaintext logp {node.pt_logp} != {logp})")
         elif node.op in ("add", "sub"):
             if ms[0][1] != ms[1][1]:
                 raise ValueError(
@@ -147,3 +180,39 @@ def validate_circuit(ops: List[CircuitOp],
             logq = node.logq2
         meta.append((logq, logp))
     return meta
+
+
+def circuit_schedule(ops: List[CircuitOp],
+                     input_meta: Dict[str, Tuple[int, int]],
+                     input_nslots: Dict[str, int],
+                     params: HEParams):
+    """The circuit's full level schedule, computed BEFORE execution.
+
+    Validates the DAG (see :func:`validate_circuit`) and returns
+    ``(meta, keys, nslots)``: per-node output (logq, logp), per-node
+    queue BUCKET KEY — the exact ``Request.bucket_key`` each node's
+    request will land in — and per-node slot count (every op preserves
+    its first operand's n_slots). This is what the circuit-aware
+    scheduler looks ahead at: knowing every future node's bucket key
+    lets it co-batch same-key nodes across circuits before they are
+    ready and prefetch the next level's table slices (Medha's
+    look-ahead-at-the-instruction-schedule idea).
+    """
+    meta = validate_circuit(ops, input_meta, params)
+    keys: List[Tuple] = []
+    nslots: List[int] = []
+    for i, node in enumerate(ops):
+        a = node.args[0]
+        in_logq = input_meta[a][0] if isinstance(a, str) else meta[a][0]
+        nslots.append(input_nslots[a] if isinstance(a, str) else nslots[a])
+        if node.op == "rotate":
+            keys.append((node.op, in_logq, node.r))
+        elif node.op == "slot_sum":
+            keys.append((node.op, in_logq, nslots[-1]))
+        elif node.op == "rescale":
+            keys.append((node.op, in_logq, node.dlogp or params.logp))
+        elif node.op == "mod_down":
+            keys.append((node.op, in_logq, node.logq2))
+        else:
+            keys.append((node.op, in_logq, None))
+    return meta, keys, nslots

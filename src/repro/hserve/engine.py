@@ -24,6 +24,14 @@ pytrees out of :class:`repro.hserve.tables.TableCache`:
   - ``add`` / ``sub`` — §III-B limb adds with mod-q masking; cheap, but
     served so an entire encrypted circuit runs without a client
     round-trip between levels (the HEAX/Medha argument).
+  - ``mul_plain`` / ``add_plain`` — the plaintext-operand ops encrypted
+    inference's affine layers want: the operand is an ENCODED polynomial
+    riding the batch (the "pt" array), so mul_plain is Fig. 2's region 1
+    alone — CRT→NTT, one pointwise product per component, iNTT→iCRT —
+    and add_plain a bare limb add into bx. NO region-2 key switch, no
+    key material, no key-switch collectives: `launch.dryrun` lowers both
+    and the HLO analysis shows zero collective bytes where mul pays the
+    full region-2 traffic.
 
 Every step is bitwise identical to its single-device `core` reference
 (`core.heaan.he_mul`/`he_add`/`rescale`/`he_mod_down`,
@@ -65,7 +73,8 @@ from repro.hserve.tables import TableCache
 
 __all__ = ["slot_sum_rotations", "make_he_rotate_step",
            "make_slot_sum_step", "make_rescale_step", "make_mod_down_step",
-           "make_addsub_step", "Inflight", "OpEngine"]
+           "make_addsub_step", "make_mul_plain_step", "make_add_plain_step",
+           "Inflight", "OpEngine"]
 
 
 def slot_sum_rotations(n_slots: int) -> Tuple[int, ...]:
@@ -189,6 +198,48 @@ def make_addsub_step(st: HEStatic, mesh, op: str, **knobs):
     return step
 
 
+def make_mul_plain_step(st: HEStatic, mesh, **knobs):
+    """Build step(t1, ax, bx, pt) -> (ax', bx') for ciphertext ×
+    plaintext — paper Fig. 2's region 1 ONLY, no key switch.
+
+    The encoded operand pt is batch data ((B, N, qlimbs) mod-q limbs),
+    lifted to the region-1 eval domain once and multiplied pointwise
+    into both components. np₁ covers 2N·q² (region1_target_bits), the
+    same bound `core.heaan.he_mul_plain` uses, and iCRT reconstructs the
+    exact integer product — so the served step is bitwise the core
+    reference. The absence of region 2 is the op's whole point: affine
+    layers of encrypted inference skip the key-switch collectives
+    entirely (launch.dryrun lowers this cell to prove it on HLO).
+    """
+    sf = make_stage_fns(st, mesh, **knobs)
+    logq, qlimbs = st.logq, st.qlimbs
+
+    def step(t1, ax, bx, pt):
+        ept = sf.to_eval(pt, t1)
+        da = sf.from_eval(sf.mont_mul(sf.to_eval(ax, t1), ept, t1),
+                          t1, st.icrt1, qlimbs)
+        db = sf.from_eval(sf.mont_mul(sf.to_eval(bx, t1), ept, t1),
+                          t1, st.icrt1, qlimbs)
+        return (sf.out(bigint.mask_bits(da, logq)),
+                sf.out(bigint.mask_bits(db, logq)))
+
+    return step
+
+
+def make_add_plain_step(st: HEStatic, mesh, **knobs):
+    """Build step(ax, bx, pt) -> (ax, bx') adding an encoded plaintext
+    into bx (mask at logq); ax passes through untouched — no NTT, no key
+    switch, no collectives (`core.heaan.he_add_plain` batched)."""
+    sf = make_stage_fns(st, mesh, **knobs)
+    logq = st.logq
+
+    def step(ax, bx, pt):
+        return (sf.out(ax),
+                sf.out(bigint.mask_bits(bigint.add(bx, pt), logq)))
+
+    return step
+
+
 @dataclasses.dataclass
 class Inflight:
     """A dispatched-but-not-awaited engine step (double-buffer handle).
@@ -291,6 +342,18 @@ class OpEngine:
 
             def runner(a):
                 return step(a["ax1"], a["bx1"], a["ax2"], a["bx2"])
+        elif op == "mul_plain":
+            step = jax.jit(
+                make_mul_plain_step(st, self.mesh, **self._knobs))
+
+            def runner(a):
+                return step(t1, a["ax1"], a["bx1"], a["pt"])
+        elif op == "add_plain":
+            step = jax.jit(
+                make_add_plain_step(st, self.mesh, **self._knobs))
+
+            def runner(a):
+                return step(a["ax1"], a["bx1"], a["pt"])
         else:
             raise ValueError(f"unknown op {op!r}")
         self._steps[key] = runner
@@ -369,7 +432,9 @@ class OpEngine:
         level metadata (the server-side level tracking contract):
 
           mul          logq,          logp₁ + logp₂
-          add/sub      logq,          logp  (equality checked at submit)
+          mul_plain    logq,          logp + pt_logp
+          add/sub/add_plain           logq, logp (equality checked at
+                                      submit)
           rotate/conjugate/slot_sum   unchanged
           rescale      logq − dlogp,  logp − dlogp
           mod_down     logq2,         logp
@@ -381,6 +446,8 @@ class OpEngine:
             logq, logp = batch.logq, c0.logp
             if op == "mul":
                 logp = c0.logp + req.cts[1].logp
+            elif op == "mul_plain":
+                logp = c0.logp + req.pt_logp
             elif op == "rescale":
                 logq -= req.dlogp
                 logp -= req.dlogp

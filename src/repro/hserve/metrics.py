@@ -11,7 +11,11 @@ the serving runtime the numbers to prove it per op kind:
   - queue depth samples over the run;
   - flush causes: how many batches ran because a bucket was full, hit
     its age deadline (the continuous-batching SLO path), or was drained —
-    the knob-tuning signal for `HEServer(max_age_s=...)`.
+    the knob-tuning signal for `HEServer(max_age_s=...)`;
+  - co-batching: of the batches that carried circuit nodes, how many
+    mixed nodes from TWO OR MORE circuits — the cross-circuit co-batch
+    rate the circuit-aware scheduler exists to raise (`HEServer(
+    schedule=True)`), plus its deferral and table-prefetch counts.
 
 Everything is plain host-side accumulation — no jax dependency — so the
 metrics can run on a frontend host next to the RequestQueue.
@@ -47,6 +51,9 @@ class ServeMetrics:
         self._depths: List[int] = []
         self._levels: set = set()
         self._flushes: Dict[str, int] = {c: 0 for c in self.FLUSH_CAUSES}
+        self._circuit_batches = 0
+        self._cross_circuit_batches = 0
+        self._circuit_nodes = 0
 
     def record_batch(self, op: str, logq: int, n_valid: int, n_pad: int,
                      wall_s: float, latencies_s: List[float]) -> None:
@@ -66,6 +73,16 @@ class ServeMetrics:
         target), "age" (oldest request hit the deadline), "drain"."""
         assert cause in self.FLUSH_CAUSES, cause
         self._flushes[cause] += 1
+
+    def record_circuit_batch(self, n_circuits: int, n_nodes: int) -> None:
+        """One served batch carried `n_nodes` circuit nodes from
+        `n_circuits` distinct circuits (co-batching accounting)."""
+        if n_nodes <= 0:
+            return
+        self._circuit_batches += 1
+        self._circuit_nodes += n_nodes
+        if n_circuits >= 2:
+            self._cross_circuit_batches += 1
 
     @staticmethod
     def _pct(xs: List[float], q: float) -> float:
@@ -93,6 +110,14 @@ class ServeMetrics:
             "per_op": per_op,
             "levels_served": sorted(self._levels),
             "flushes": dict(self._flushes),
+            "cobatch": {
+                "circuit_batches": self._circuit_batches,
+                "circuit_nodes": self._circuit_nodes,
+                "cross_circuit_batches": self._cross_circuit_batches,
+                "cross_circuit_rate": round(
+                    self._cross_circuit_batches / self._circuit_batches, 4)
+                if self._circuit_batches else 0.0,
+            },
             "queue_depth": {
                 "mean": round(float(np.mean(self._depths)), 2)
                 if self._depths else 0.0,

@@ -32,7 +32,15 @@ HE Mul:
   slot_sum    1         n_slots (log₂ n fused rotate+add rounds)
   rescale     1         dlogp, the scale drop (÷2^dlogp; §III-A)
   mod_down    1         logq2, the target modulus
+  mul_plain   1         — (encoded-operand product: region 1 ONLY —
+                           no key switch, the affine-layer fast path)
+  add_plain   1         — (plaintext added to bx; no key material)
   ==========  ========  =============================================
+
+The plaintext-operand ops carry their encoded operand (a host
+(N, qlimbs) mod-q limb array) on the request itself; it is stacked into
+the batch as the "pt" array — batch DATA, not trace signature, so every
+same-level mul_plain shares one compiled step regardless of operand.
 
 Placement onto the mesh's "data" axis happens in the engine (the
 assembler stays device-free so it can run on a frontend host).
@@ -43,17 +51,23 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict, deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.cipher import Ciphertext
 
-__all__ = ["Request", "Batch", "RequestQueue", "BatchAssembler", "OPS"]
+__all__ = ["Request", "Batch", "RequestQueue", "BatchAssembler", "OPS",
+           "PLAIN_OPS"]
 
 # op -> number of ciphertext operands
 OPS = {"mul": 2, "add": 2, "sub": 2, "rotate": 1, "conjugate": 1,
-       "slot_sum": 1, "rescale": 1, "mod_down": 1}
+      "slot_sum": 1, "rescale": 1, "mod_down": 1,
+      "mul_plain": 1, "add_plain": 1}
+
+# ops whose second operand is an ENCODED PLAINTEXT riding the request
+# (no key material, no region-2 key switch — paper Fig. 2 region 1 only)
+PLAIN_OPS = ("mul_plain", "add_plain")
 
 BucketKey = Tuple  # (op, logq, extra): extra = r | n_slots | dlogp | logq2 | None
 
@@ -65,7 +79,9 @@ class Request:
     cts: operand ciphertexts (2 for "mul"/"add"/"sub", 1 otherwise), all
     at the same modulus 2^logq. Op parameters: `r` is the left-rotation
     amount for "rotate", `dlogp` the scale drop for "rescale", `logq2`
-    the target modulus for "mod_down".
+    the target modulus for "mod_down". Plaintext-operand ops carry their
+    encoded operand in `pt` ((N, qlimbs) mod-q limbs at the ciphertext's
+    level) and its scale in `pt_logp`.
     """
 
     rid: int
@@ -74,6 +90,8 @@ class Request:
     r: int = 0
     dlogp: int = 0
     logq2: int = 0
+    pt: Optional[np.ndarray] = None
+    pt_logp: int = 0
     t_submit: float = 0.0
 
     @property
@@ -131,17 +149,24 @@ class RequestQueue:
     how long each bucket's head request has waited (`expired_key`) and
     the recent arrival rate (`arrival_rate`), which the server uses to
     size its adaptive bucket target (ROADMAP: continuous batching).
+
+    clock: the time source `submit` stamps `t_submit` with when the
+    caller does not pass one. HEServer threads its own (injectable)
+    clock here, so direct `queue.submit(...)` calls and server submits
+    land on ONE timeline — age deadlines and latency metrics stay
+    meaningful under a fake test clock.
     """
 
     # window of recent submit timestamps used for the arrival-rate
     # estimate; big enough to smooth bursts, small enough to track drift
     _RATE_WINDOW = 64
 
-    def __init__(self):
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
         self._buckets: "OrderedDict[BucketKey, Deque[Request]]" = \
             OrderedDict()
         self._next_rid = 0
         self._submitted = 0
+        self._clock = time.perf_counter if clock is None else clock
         self._arrivals: Deque[float] = deque(maxlen=self._RATE_WINDOW)
 
     def reserve_rid(self) -> int:
@@ -154,8 +179,15 @@ class RequestQueue:
 
     def submit(self, op: str, cts: Tuple[Ciphertext, ...], r: int = 0,
                dlogp: int = 0, logq2: int = 0,
+               pt: Optional[np.ndarray] = None, pt_logp: int = 0,
                t_submit: Optional[float] = None) -> int:
-        """Enqueue a request; returns its request id."""
+        """Enqueue a request; returns its request id.
+
+        t_submit defaults to THIS QUEUE'S clock — never a module-level
+        time call — so a server built with an injected clock keeps every
+        request on the injected timeline even when the queue is driven
+        directly (age-based flush tests skew otherwise).
+        """
         if op not in OPS:
             raise ValueError(f"unknown op {op!r}; serve one of {set(OPS)}")
         cts = tuple(cts) if isinstance(cts, (tuple, list)) else (cts,)
@@ -181,9 +213,34 @@ class RequestQueue:
             raise ValueError(
                 f"mod_down target logq2={logq2} outside (0, "
                 f"{cts[0].logq}]")
+        if op in PLAIN_OPS:
+            if pt is None:
+                raise ValueError(f"{op} needs an encoded plaintext operand "
+                                 "(core.heaan.encode_plain)")
+            pt = np.asarray(pt)
+            ct_shape = cts[0].ax.shape      # no host copy — shape only
+            if pt.ndim != 2 or pt.shape[0] != ct_shape[0] \
+                    or pt.shape[1] < ct_shape[-1]:
+                raise ValueError(
+                    f"{op} plaintext shape {pt.shape} does not cover the "
+                    f"ciphertext's {tuple(ct_shape)} limbs")
+            # copy, not a view: the queued request must not alias the
+            # caller's (mutable) buffer — a client reusing its encode
+            # scratch before the bucket flushes would corrupt the batch
+            pt = np.array(pt[:, :ct_shape[-1]])
+            if op == "mul_plain" and pt_logp <= 0:
+                raise ValueError(
+                    "mul_plain needs pt_logp, the plaintext's scale "
+                    "(HEServer.submit defaults it to params.log_delta)")
+            if op == "add_plain":
+                pt_logp = pt_logp or cts[0].logp
+                if pt_logp != cts[0].logp:
+                    raise ValueError(
+                        f"add_plain operand scales differ: plaintext logp "
+                        f"{pt_logp} != ciphertext {cts[0].logp}")
         req = Request(rid=self._next_rid, op=op, cts=cts, r=r, dlogp=dlogp,
-                      logq2=logq2,
-                      t_submit=time.perf_counter()
+                      logq2=logq2, pt=pt, pt_logp=pt_logp,
+                      t_submit=self._clock()
                       if t_submit is None else t_submit)
         self._next_rid += 1
         self._submitted += 1
@@ -229,9 +286,34 @@ class RequestQueue:
                     best, best_t = k, d[0].t_submit
         return best
 
-    def arrival_rate(self) -> Optional[float]:
-        """Requests/second over the recent submit window (None until two
-        arrivals with distinct timestamps exist)."""
+    def arrival_rate(self, now: Optional[float] = None,
+                     window_s: Optional[float] = None) -> Optional[float]:
+        """Requests/second over the recent submit window.
+
+        With `now` and `window_s`, arrivals older than ``now - window_s``
+        are DECAYED OUT of the estimate (and dropped from the window):
+        after an idle gap the rate reflects current traffic, not the last
+        burst — otherwise the adaptive bucket target stays inflated and a
+        post-idle trickle waits the full age deadline per request instead
+        of flushing at the adapted target (the flush-stall regression in
+        tests/test_hserve.py). A single in-window arrival reports the
+        sparse-traffic floor ``1 / window_s`` so a lone post-idle request
+        still shrinks the target. Without `now`, the legacy whole-window
+        span estimate is returned (None until two distinct timestamps).
+        """
+        if now is not None and window_s is not None and window_s > 0:
+            cutoff = now - window_s
+            while self._arrivals and self._arrivals[0] < cutoff:
+                self._arrivals.popleft()          # stale: decay the window
+            if not self._arrivals:
+                return None
+            span = self._arrivals[-1] - self._arrivals[0]
+            if span <= 0:
+                # one arrival — or several sharing a (coarse/fake) clock
+                # tick: count over the window, never None, so the target
+                # keeps tracking sparse post-idle traffic
+                return len(self._arrivals) / window_s
+            return (len(self._arrivals) - 1) / span
         if len(self._arrivals) < 2:
             return None
         span = self._arrivals[-1] - self._arrivals[0]
@@ -282,5 +364,10 @@ class BatchAssembler:
         if OPS[key[0]] == 2:
             arrays["ax2"] = stack("ax", 1)
             arrays["bx2"] = stack("bx", 1)
+        if key[0] in PLAIN_OPS:
+            rows = [np.asarray(r.pt) for r in requests]
+            if pad:
+                rows = rows + [np.zeros_like(rows[0])] * pad
+            arrays["pt"] = np.stack(rows)
         return Batch(key=key, requests=list(requests), arrays=arrays,
                      n_valid=n_valid)

@@ -45,6 +45,16 @@ device_put overlap the in-flight device step and the engine never waits
 on the frontend. Results then arrive one poll late — submit→result
 still runs front-to-back in drain(), and benchmarks/serve_he.py reports
 the overlap-on/off drain-wall comparison.
+
+Circuit-aware scheduling (``schedule=True``): submitted circuits'
+validated level schedules are registered with a
+:class:`repro.hserve.scheduler.CircuitScheduler`, which (a) defers an
+under-full drain flush when a same-key sibling node from another
+circuit is within the lookahead horizon — so concurrent circuits
+co-batch even out of lockstep — and (b) prefetches the NEXT levels'
+table slices while the current batch is in flight (riding the same
+dispatch/wait double buffer). Scheduling never changes a result bit;
+it only reorders drain flushes and warms caches.
 """
 
 from __future__ import annotations
@@ -55,17 +65,20 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cipher import Ciphertext, EvalKey
 from repro.core.params import HEParams
-from repro.hserve.circuit import CircuitOp, validate_circuit
+from repro.hserve.circuit import CircuitOp, circuit_schedule
 from repro.hserve.engine import Inflight, OpEngine, slot_sum_rotations
 from repro.hserve.metrics import ServeMetrics
 from repro.hserve.queue import Batch, BatchAssembler, RequestQueue
+from repro.hserve.scheduler import CircuitScheduler
 from repro.hserve.tables import TableCache
 
 __all__ = ["HEServer"]
 
 
 class _CircuitState:
-    """One in-progress circuit: resolved values + submission bookkeeping."""
+    """One in-progress circuit: resolved values + submission bookkeeping.
+    (The per-node bucket-key schedule lives in the scheduler, which is
+    the only consumer — one copy, no drift.)"""
 
     def __init__(self, cid: int, ops: List[CircuitOp],
                  inputs: Dict[str, Ciphertext]):
@@ -93,9 +106,21 @@ class HEServer:
             trickle flushes promptly; only active under max_age_s.
     overlap: double-buffer batch assembly + device_put against the
             in-flight engine step (results arrive one poll late).
+    schedule: circuit-aware scheduling — defer under-full drain flushes
+            for same-key sibling nodes within `lookahead` engine batches
+            (cross-circuit co-batching) and prefetch next-level table
+            slices behind the in-flight batch. Mutable attribute, so
+            benchmarks can A/B it on one warm server.
+    lookahead: the scheduler's sibling horizon in engine batches.
+    prefetch: table-slice prefetch on/off (only active under schedule).
     clock:  time source for ages/latencies (injectable for deterministic
-            tests; defaults to time.perf_counter).
+            tests; defaults to time.perf_counter). Threaded into the
+            RequestQueue so direct queue submits share the timeline.
     """
+
+    # the arrival-rate estimate decays over this many deadline windows,
+    # so a post-idle trickle sees its own rate, not the last burst's
+    _RATE_DECAY_WINDOWS = 8
 
     def __init__(self, params: HEParams, evk: Optional[EvalKey] = None,
                  rot_keys: Optional[Dict[int, EvalKey]] = None,
@@ -104,6 +129,9 @@ class HEServer:
                  max_age_s: Optional[float] = None,
                  adaptive_target: bool = True,
                  overlap: bool = False,
+                 schedule: bool = False,
+                 lookahead: int = 2,
+                 prefetch: bool = True,
                  clock: Callable[[], float] = time.perf_counter,
                  **engine_knobs):
         if mesh is None:
@@ -115,13 +143,19 @@ class HEServer:
         self.max_age_s = max_age_s
         self.adaptive_target = adaptive_target
         self.overlap = overlap
+        self.schedule = schedule
+        self.prefetch = prefetch
         self._clock = clock
         self.cache = TableCache(params, evk, rot_keys, conj_key)
         self.engine = OpEngine(params, mesh, self.cache,
                                use_kernels=use_kernels, **engine_knobs)
-        self.queue = RequestQueue()
+        self.queue = RequestQueue(clock=clock)
         self.assembler = BatchAssembler(batch)
         self.metrics = ServeMetrics()
+        # always constructed (registration is cheap bookkeeping), so
+        # `schedule` can be toggled on a warm server without losing the
+        # in-progress circuits' schedules
+        self.scheduler = CircuitScheduler(lookahead=lookahead)
         self._inflight: Optional[Inflight] = None
         self._circuits: Dict[int, _CircuitState] = {}
         self._node_of_rid: Dict[int, Tuple[int, int]] = {}
@@ -129,13 +163,16 @@ class HEServer:
     # ---- request intake --------------------------------------------------
 
     def submit(self, op: str, cts, r: int = 0, dlogp: int = 0,
-               logq2: int = 0) -> int:
+               logq2: int = 0, pt=None, pt_logp: int = 0) -> int:
         """Enqueue one request; returns its rid (used to match results).
 
         Key availability is checked HERE, not at execution: a request
         the engine cannot serve must never enter the queue (it would
         fail mid-drain, after being popped, taking the batch's other
-        requests down with it). rescale's dlogp defaults to params.logp.
+        requests down with it). rescale's dlogp defaults to params.logp;
+        mul_plain's pt_logp to params.log_delta. The plaintext ops need
+        NO key material — that is their point. t_submit comes from the
+        queue's clock (the server's injected one).
         """
         if op == "mul":
             self.cache.evk()                  # raises when absent
@@ -154,8 +191,10 @@ class HEServer:
         elif op == "rescale" and dlogp == 0:
             dlogp = self.params.logp          # negative falls through to
                                               # the queue's ValueError
+        elif op == "mul_plain" and pt_logp == 0:
+            pt_logp = self.params.log_delta
         return self.queue.submit(op, cts, r=r, dlogp=dlogp, logq2=logq2,
-                                 t_submit=self._clock())
+                                 pt=pt, pt_logp=pt_logp)
 
     def submit_mul(self, c1: Ciphertext, c2: Ciphertext) -> int:
         return self.submit("mul", (c1, c2))
@@ -182,6 +221,19 @@ class HEServer:
     def submit_mod_down(self, ct: Ciphertext, logq2: int) -> int:
         return self.submit("mod_down", (ct,), logq2=logq2)
 
+    def submit_mul_plain(self, ct: Ciphertext, pt,
+                         pt_logp: Optional[int] = None) -> int:
+        """Ciphertext × encoded plaintext (region 1 only — no key
+        switch). pt: (N, qlimbs) mod-q limbs at ct's level
+        (core.heaan.encode_plain); pt_logp defaults to params.log_delta."""
+        return self.submit("mul_plain", (ct,), pt=pt, pt_logp=pt_logp or 0)
+
+    def submit_add_plain(self, ct: Ciphertext, pt,
+                         pt_logp: Optional[int] = None) -> int:
+        """Ciphertext + encoded plaintext (bx-only limb add; the
+        plaintext must be encoded at ct's scale)."""
+        return self.submit("add_plain", (ct,), pt=pt, pt_logp=pt_logp or 0)
+
     # ---- circuits --------------------------------------------------------
 
     def submit_circuit(self, ops: Sequence[CircuitOp],
@@ -200,17 +252,15 @@ class HEServer:
         """
         ops = list(ops)
         meta = {name: (ct.logq, ct.logp) for name, ct in inputs.items()}
-        validate_circuit(ops, meta, self.params)
+        in_slots = {name: ct.n_slots for name, ct in inputs.items()}
+        # the validated level schedule: per-node (logq, logp), per-node
+        # queue bucket key (what the scheduler looks ahead at), per-node
+        # slot count (every op preserves its first operand's n_slots)
+        _, keys, nslots = circuit_schedule(ops, meta, in_slots, self.params)
         # key availability, up front — a node the engine cannot serve
         # must never let ANY of the circuit enter the queue (it would
-        # fail mid-drain with siblings already submitted). Every op
-        # preserves its first operand's n_slots, so slot_sum key needs
-        # propagate through the (already-validated) arg references.
-        nslots: List[int] = []
-        for node in ops:
-            a = node.args[0]
-            nslots.append(inputs[a].n_slots if isinstance(a, str)
-                          else nslots[a])
+        # fail mid-drain with siblings already submitted).
+        for i, node in enumerate(ops):
             if node.op == "mul":
                 self.cache.evk()
             elif node.op == "rotate":
@@ -218,16 +268,19 @@ class HEServer:
             elif node.op == "conjugate":
                 self.cache.conj_key()
             elif node.op == "slot_sum":
-                missing = [rr for rr in slot_sum_rotations(nslots[-1])
+                missing = [rr for rr in slot_sum_rotations(nslots[i])
                            if rr not in self.cache.rotation_amounts]
                 if missing:
                     raise KeyError(
-                        f"circuit slot_sum over {nslots[-1]} slots needs "
+                        f"circuit slot_sum over {nslots[i]} slots needs "
                         f"rotation keys {missing}; loaded: "
                         f"{self.cache.rotation_amounts}")
         cid = self.queue.reserve_rid()
         circ = _CircuitState(cid, ops, inputs)
         self._circuits[cid] = circ
+        self.scheduler.register(
+            cid, keys, [tuple(a for a in node.args if isinstance(a, int))
+                        for node in ops])
         self._submit_ready(circ)
         return cid
 
@@ -242,33 +295,43 @@ class HEServer:
             except KeyError:
                 continue                      # operands not ready yet
             rid = self.submit(node.op, cts, r=node.r, dlogp=node.dlogp,
-                              logq2=node.logq2)
+                              logq2=node.logq2, pt=node.pt,
+                              pt_logp=node.pt_logp)
             circ.submitted.add(i)
             self._node_of_rid[rid] = (circ.cid, i)
+            self.scheduler.on_enqueued(circ.cid, i)
 
     def _feed_circuit(self, cid: int, node_idx: int, ct: Ciphertext
                       ) -> List[Tuple[int, Ciphertext]]:
         """Route one completed node result back into its circuit; returns
         the client-visible (cid, result) pair when the circuit finishes."""
+        self.scheduler.on_completed(cid, node_idx)
         circ = self._circuits.get(cid)
         if circ is None:                      # finished via its last node
             return []                         # while a dangling node ran
         circ.values[node_idx] = ct
         if node_idx == len(circ.ops) - 1:
             del self._circuits[cid]
+            self.scheduler.on_finished(cid)
             return [(cid, ct)]
         self._submit_ready(circ)
         return []
 
     # ---- the serving loop ------------------------------------------------
 
-    def _bucket_target(self) -> int:
+    def _bucket_target(self, now: Optional[float] = None) -> int:
         """Full-bucket release threshold. Fixed at `batch` without an
         SLO; under one, sized to the arrivals a deadline window is
-        expected to gather so a trickle stops waiting for a full batch."""
+        expected to gather so a trickle stops waiting for a full batch.
+        The rate estimate decays over _RATE_DECAY_WINDOWS deadline
+        windows — after an idle gap the target shrinks back to current
+        traffic instead of staying inflated from the last burst (the
+        post-idle flush-stall regression)."""
         if self.max_age_s is None or not self.adaptive_target:
             return self.batch
-        rate = self.queue.arrival_rate()
+        now = self._clock() if now is None else now
+        rate = self.queue.arrival_rate(
+            now, self._RATE_DECAY_WINDOWS * self.max_age_s)
         if not rate:
             return self.batch
         return max(1, min(self.batch, math.ceil(rate * self.max_age_s)))
@@ -279,14 +342,23 @@ class HEServer:
         if no work ran). With overlap, the dispatched batch's results
         return on the NEXT poll; a poll with no new work retires the
         in-flight batch instead of returning nothing.
+
+        The drain cause is scheduler-aware under ``schedule=True``: an
+        under-full bucket expecting a same-key sibling node within the
+        lookahead horizon is deferred so the sibling co-batches — but
+        SOME non-empty bucket is always released (the scheduler's
+        progress guarantee), so a flush-poll on a non-empty queue can
+        never return without running work.
         """
         self.metrics.record_depth(self.queue.depth)
         now = self._clock()
-        key, cause = self.queue.ready_key(self._bucket_target()), "full"
+        key, cause = self.queue.ready_key(self._bucket_target(now)), "full"
         if key is None and self.max_age_s is not None:
             key, cause = self.queue.expired_key(self.max_age_s, now), "age"
         if key is None and flush:
-            key, cause = self.queue.any_key(), "drain"
+            key = (self.scheduler.drain_key(self.queue, self.batch)
+                   if self.schedule else self.queue.any_key())
+            cause = "drain"
         if key is None:
             return self._retire(self._take_inflight())
         reqs = self.queue.pop_bucket(key, self.batch)
@@ -295,9 +367,27 @@ class HEServer:
         if self.overlap:
             prev = self._take_inflight()
             self._inflight = self.engine.dispatch(b)
+            self._prefetch_next(b)            # rides the in-flight step
             return self._retire(prev)
-        outs, wall = self.engine.wait(self.engine.dispatch(b))
+        inf = self.engine.dispatch(b)
+        self._prefetch_next(b)                # host work while b runs
+        outs, wall = self.engine.wait(inf)
         return self._complete(b, outs, wall)
+
+    def _prefetch_next(self, b: Batch) -> None:
+        """Materialize the table slices the NEXT levels need while `b`
+        is in flight: the successor nodes' input levels from the
+        registered circuit schedules, plus this batch's own output level
+        for the level-changing ops (rescale / mod-down). The per-np iCRT
+        entries are the only host-side build; hiding it behind the
+        running batch is the prefetch win."""
+        if not (self.schedule and self.prefetch):
+            return
+        tags = [t for t in (self._node_of_rid.get(r.rid)
+                            for r in b.requests) if t is not None]
+        levels = self.scheduler.next_levels(tags)
+        levels |= self.scheduler.levels_for_key(b.key)
+        self.scheduler.prefetch_levels(self.cache, levels)
 
     def _take_inflight(self) -> Optional[Inflight]:
         inf, self._inflight = self._inflight, None
@@ -319,6 +409,11 @@ class HEServer:
         self.metrics.record_batch(
             b.op, b.logq, b.n_valid, b.n_pad, wall,
             [done - r.t_submit for r in b.requests])
+        tags = [self._node_of_rid.get(r.rid) for r in b.requests]
+        n_nodes = sum(1 for t in tags if t is not None)
+        if n_nodes:
+            self.metrics.record_circuit_batch(
+                len({t[0] for t in tags if t is not None}), n_nodes)
         client: List[Tuple[int, Ciphertext]] = []
         for req, ct in zip(b.requests, outs):
             tag = self._node_of_rid.pop(req.rid, None)
@@ -329,9 +424,18 @@ class HEServer:
         return client
 
     def drain(self) -> Dict[int, Ciphertext]:
-        """Serve until the queue, every circuit, and the in-flight step
-        are all empty (padding the stragglers); returns {rid: result}
-        (circuit results under their cid)."""
+        """Serve until the queue, EVERY in-flight circuit, and the
+        in-flight step are all empty (padding the stragglers); returns
+        {rid: result} (circuit results under their cid).
+
+        The loop iterates on all three states because a circuit node's
+        parent can complete during the FINAL drain pass — its children
+        are enqueued inside poll(), after this iteration's flush choice
+        was made, and only the next iteration serves them. A flush-poll
+        on a non-empty queue always runs a batch (the scheduler's
+        deferral keeps a progress guarantee), so the loop terminates; if
+        a circuit nevertheless ends up with no node queued or in flight,
+        its ready nodes are re-armed once before giving up."""
         results: Dict[int, Ciphertext] = {}
         while (self.queue.depth or self._inflight is not None
                or self._circuits):
@@ -340,7 +444,13 @@ class HEServer:
                 results[rid] = ct
             if (not served and not self.queue.depth
                     and self._inflight is None):
-                if self._circuits:        # should be unreachable
+                if self._circuits:
+                    # defensive self-heal: re-run readiness over the
+                    # stragglers; anything enqueued keeps the loop alive
+                    for circ in list(self._circuits.values()):
+                        self._submit_ready(circ)
+                    if self.queue.depth:
+                        continue
                     raise RuntimeError(
                         f"circuit(s) {sorted(self._circuits)} stalled "
                         "with no pending requests")
@@ -352,8 +462,11 @@ class HEServer:
     def reset_metrics(self) -> None:
         """Start a fresh measurement window (compiled steps and resident
         tables are kept — use after a warm-up pass so reported latencies
-        are steady state)."""
+        are steady state). The scheduler's deferral/prefetch counters
+        reset with it, so stats()["scheduler"] reads per-window too;
+        in-progress circuit schedules are untouched."""
         self.metrics = ServeMetrics()
+        self.scheduler.reset_counters()
 
     def stats(self) -> dict:
         return {
@@ -369,5 +482,8 @@ class HEServer:
                 "bucket_target": self._bucket_target(),
                 "overlap": self.overlap,
             },
+            "scheduler": {"enabled": self.schedule,
+                          "prefetch_tables": self.prefetch,
+                          **self.scheduler.stats()},
             "submitted": self.queue.submitted,
         }

@@ -116,6 +116,12 @@ class TableCache:
         self._levels[logq] = (t1, t2)
         return t1, t2
 
+    def has_level(self, logq: int) -> bool:
+        """Whether 2^logq's slice views are already materialized — the
+        circuit-aware scheduler's prefetch asks before warming a level
+        behind the in-flight batch (`CircuitScheduler.prefetch_levels`)."""
+        return logq in self._levels
+
     def _region_view(self, npn: int, K: int) -> Dict[str, jnp.ndarray]:
         t = {k: self._resident[k][:npn] for k in _ROW_KEYS}
         t.update({k: self._resident[k][:npn, :K] for k in _ROWCOL_KEYS})

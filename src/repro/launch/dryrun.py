@@ -240,7 +240,8 @@ def lower_he_cell(batch: int, mesh, *, logq=None) -> dict:
 # ops the serving engine adds on top of he_mul; lowered with abstract
 # he_table_specs tables (no multi-second twiddle build), exactly as the
 # engine jits them, so the collective matrix covers the full served set
-HE_SERVING_OPS = ("rotate", "slot_sum", "rescale")
+HE_SERVING_OPS = ("rotate", "slot_sum", "rescale", "mul_plain",
+                  "add_plain")
 
 
 def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
@@ -251,20 +252,24 @@ def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
     evk-shaped Galois key specs (rotation keys have exactly the evk
     pytree shape); `rescale` consumes nothing but the ciphertext batch —
     it is a pure limb shift, which is the point the analysis record
-    makes: zero collective bytes at any mesh size.
+    makes: zero collective bytes at any mesh size. The plaintext-operand
+    ops make the complementary point: `mul_plain` is region 1 alone (its
+    HLO carries NO key-switch collectives, only the CRT/iCRT reduction
+    traffic) and `add_plain` is a bare limb add with nothing on the wire
+    at all.
     """
     from repro.core.rotate import rotation_k
     from repro.dist import he_pipeline as hp
     from repro.dist.sharding import he_limb_sharding
     from repro.hserve.engine import (
-        make_he_rotate_step, make_rescale_step, make_slot_sum_step,
-        slot_sum_rotations,
+        make_add_plain_step, make_he_rotate_step, make_mul_plain_step,
+        make_rescale_step, make_slot_sum_step, slot_sum_rotations,
     )
     if params is None:
         from repro.configs.heaan_mul import CONFIG as params
     logq = params.logQ if logq is None else logq
     st = hp.he_static(params, logq)
-    _, t2, ek = hp.he_table_specs(st)
+    t1, t2, ek = hp.he_table_specs(st)
     ct_sh = he_limb_sharding(mesh, batch=batch)
     ct = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype,
                               sharding=ct_sh)
@@ -280,6 +285,12 @@ def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
     elif op == "rescale":
         step = make_rescale_step(st, mesh, params.logp)
         lowered = jax.jit(step).lower(ct, ct)
+    elif op == "mul_plain":
+        step = make_mul_plain_step(st, mesh)
+        lowered = jax.jit(step).lower(t1, ct, ct, ct)   # pt: same spec
+    elif op == "add_plain":
+        step = make_add_plain_step(st, mesh)
+        lowered = jax.jit(step).lower(ct, ct, ct)
     else:
         raise ValueError(f"unknown serving op {op!r}; "
                          f"one of {HE_SERVING_OPS}")

@@ -6,7 +6,8 @@ repro.hserve runtime (queue → level-aware table cache → sharded engine).
         --preset smoke --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --he --batch 8 \
         --requests 24 --levels 3 --rotations 4 --conjugations 2 \
-        [--circuit] [--max-age-s 0.05] [--overlap] [--kernels]
+        [--plain-frac 0.5] [--circuit] [--schedule] [--max-age-s 0.05] \
+        [--overlap] [--kernels]
 
 Both paths place their state with repro.dist.sharding rules on the host
 mesh (whatever devices this process has), so the same driver scales from
@@ -46,17 +47,22 @@ def generate(params, cfg: ModelConfig, tokens, gen_steps: int,
 
 def serve_he(batch: int, requests: int = 0, levels: int = 1,
              rotations: int = 0, conjugations: int = 0,
-             model_shards: int = 1, use_kernels: bool = False,
-             max_age_s: float | None = None, overlap: bool = False,
-             circuit: bool = False, seed: int = 0) -> dict:
+             plain_frac: float = 0.0, model_shards: int = 1,
+             use_kernels: bool = False, max_age_s: float | None = None,
+             overlap: bool = False, circuit: bool = False,
+             schedule: bool = False, seed: int = 0) -> dict:
     """Batched multi-level HE serving over the repro.hserve runtime.
 
     Builds an HEServer (resident tables + jit-once engine on the host
     mesh), submits a mixed stream of HE-Mul / rotate / conjugate
-    requests spread over `levels` moduli — plus, with `circuit`, a whole
-    degree-4 encrypted polynomial circuit via submit_circuit — drains
-    the queue with padded batching, and verifies every decrypted result.
-    Returns the server stats dict plus a max_err field (printed by main).
+    requests spread over `levels` moduli — `plain_frac` of the mul share
+    served as the key-switch-free mul_plain/add_plain plaintext-operand
+    ops — plus, with `circuit`, a whole degree-4 encrypted polynomial
+    circuit via submit_circuit (TWO staggered copies under `schedule`,
+    exercising the circuit-aware scheduler's cross-circuit co-batching
+    and table prefetch) — drains the queue with padded batching, and
+    verifies every decrypted result. Returns the server stats dict plus
+    a max_err field (printed by main).
     """
     from repro.configs.heaan_mul import SMOKE
     from repro.core import heaan as H
@@ -71,13 +77,15 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     # rescale (ciphertext exhausted), and verification rescales every mul
     assert 1 <= levels <= params.L - 1, \
         f"--levels must be in [1, {params.L - 1}]"
+    assert 0.0 <= plain_frac <= 1.0, "--plain-frac must be in [0, 1]"
     sk, pk, evk = keygen(params, seed=0)
     rot_keys = {1: rot_keygen(params, sk, 1)} if rotations else {}
     conj_key = conj_keygen(params, sk) if conjugations or circuit else None
     server = HEServer(params, evk, rot_keys, conj_key,
                       mesh=make_host_mesh(model=model_shards),
                       batch=batch, use_kernels=use_kernels,
-                      max_age_s=max_age_s, overlap=overlap)
+                      max_age_s=max_age_s, overlap=overlap,
+                      schedule=schedule)
 
     rng = np.random.default_rng(seed)
     n = params.n_slots_max
@@ -86,13 +94,25 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     n_mul = requests - rotations - conjugations
     assert n_mul >= 0, \
         "--rotations + --conjugations cannot exceed --requests"
+    n_plain = int(round(plain_frac * n_mul))
     for i in range(requests):
         logq = logqs[i % levels]
         z = rng.normal(size=n) + 1j * rng.normal(size=n)
         ct = H.encrypt_message(z, pk, params, seed=2 * i + 1)
         if logq < params.logQ:
             ct = H.he_mod_down(ct, params, logq)
-        if i < n_mul:
+        if i < n_plain:
+            # plaintext-operand ops: encode-only operand, region-1
+            # product / bx add — no key switch, no key material
+            w = rng.normal(size=n) + 1j * rng.normal(size=n)
+            pt = H.encode_plain(w, params, logq)
+            if i % 2 == 0:
+                expect[server.submit_mul_plain(ct, pt)] = \
+                    ("mul_plain", z * w)
+            else:
+                expect[server.submit_add_plain(ct, pt)] = \
+                    ("add_plain", z + w)
+        elif i < n_mul:
             z2 = rng.normal(size=n) + 1j * rng.normal(size=n)
             c2 = H.encrypt_message(z2, pk, params, seed=2 * i + 2)
             if logq < params.logQ:
@@ -106,18 +126,28 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     if circuit:
         # a degree-4 encrypted polynomial, evaluated WHOLLY server-side:
         # conj(x⁴) + x — muls, rescales, a mod-down alignment, conjugate,
-        # and an add, all through one submit_circuit round trip
-        zc = rng.normal(size=n) + 1j * rng.normal(size=n)
-        x = H.encrypt_message(zc, pk, params, seed=7777)
+        # and an add, all through one submit_circuit round trip. Under
+        # --schedule a second, STAGGERED copy rides along so the
+        # scheduler's cross-circuit co-batching is exercised end-to-end.
         ops, _ = degree4_demo_circuit(params)
-        cid = server.submit_circuit(ops, inputs={"x": x})
-        expect[cid] = ("circuit", np.conj(zc ** 4) + zc)
+        n_circ = 2 if schedule else 1
+        results = {}
+        for j in range(n_circ):
+            zc = rng.normal(size=n) + 1j * rng.normal(size=n)
+            x = H.encrypt_message(zc, pk, params, seed=7777 + j)
+            cid = server.submit_circuit(ops, inputs={"x": x})
+            expect[cid] = ("circuit", np.conj(zc ** 4) + zc)
+            if schedule and j == 0:       # desync the two circuits (the
+                results.update(           # poll may complete plain reqs)
+                    dict(server.poll(flush=True)))
+    else:
+        results = {}
 
-    results = server.drain()
+    results.update(server.drain())
     errs = []
     for rid, (op, want) in expect.items():
         out = results[rid]
-        if op == "mul":
+        if op in ("mul", "mul_plain"):
             out = H.rescale(out, params)
         got = H.decrypt_message(out, sk, params)
         errs.append(float(np.abs(got - want).max()))
@@ -151,10 +181,21 @@ def main():
     ap.add_argument("--conjugations", type=int, default=0,
                     help="how many of the HE requests are conjugate "
                          "(σ₋₁ through the same key-switch machinery)")
+    ap.add_argument("--plain-frac", type=float, default=0.0,
+                    help="serve this fraction of the mul share as "
+                         "plaintext-operand ops (mul_plain/add_plain: "
+                         "encode-only operand, NO key switch — the "
+                         "encrypted-inference affine-layer fast path)")
     ap.add_argument("--circuit", action="store_true",
                     help="also submit a degree-4 encrypted polynomial "
                          "circuit (mul → rescale → mod-down → conjugate "
-                         "→ add) via submit_circuit and verify it")
+                         "→ add) via submit_circuit and verify it "
+                         "(two staggered copies under --schedule)")
+    ap.add_argument("--schedule", action="store_true",
+                    help="circuit-aware scheduling: co-batch same-"
+                         "(op, level) nodes across circuits via "
+                         "lookahead deferral and prefetch next-level "
+                         "table slices behind the in-flight batch")
     ap.add_argument("--max-age-s", type=float, default=None,
                     help="continuous-batching SLO: flush a bucket once "
                          "its oldest request has waited this long "
@@ -173,10 +214,11 @@ def main():
         stats = serve_he(args.batch, requests=args.requests,
                          levels=args.levels, rotations=args.rotations,
                          conjugations=args.conjugations,
+                         plain_frac=args.plain_frac,
                          model_shards=args.model_shards,
                          use_kernels=args.kernels,
                          max_age_s=args.max_age_s, overlap=args.overlap,
-                         circuit=args.circuit)
+                         circuit=args.circuit, schedule=args.schedule)
         ops = ", ".join(
             f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
             f"(p50 {d['latency_ms']['p50']}ms, "
@@ -187,6 +229,12 @@ def main():
               f"steps_compiled={stats['engine']['steps_compiled']} "
               f"(compile {stats['engine']['compile_s']}s)")
         print(f"  {ops}")
+        if args.schedule:
+            sch, cb = stats["scheduler"], stats["cobatch"]
+            print(f"  scheduler: lookahead={sch['lookahead']} "
+                  f"deferrals={sch['deferrals']} "
+                  f"prefetched_levels={sch['prefetched_levels']} "
+                  f"cross_circuit_rate={cb['cross_circuit_rate']}")
         print(f"  max_err {stats['max_err']:.2e}")
         assert stats["max_err"] < 1e-2, "HE serving pipeline diverged"
         return

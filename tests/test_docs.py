@@ -17,7 +17,7 @@ def test_markdown_relative_links_resolve():
 
 
 def test_bench_serve_he_matches_documented_schema():
-    assert check_docs.check_bench(REPO) == []
+    assert check_docs.check_bench(REPO / "BENCH_serve_he.json") == []
 
 
 def test_checker_flags_broken_links_and_bad_bench(tmp_path):
@@ -34,14 +34,24 @@ def test_checker_flags_broken_links_and_bad_bench(tmp_path):
     assert any("NOPE.md" in e for e in errs)
     assert any("missing.md" in e for e in errs)
 
-    (tmp_path / "BENCH_serve_he.json").write_text("{not json")
-    assert any("invalid JSON" in e for e in check_docs.check_bench(tmp_path))
-    (tmp_path / "BENCH_serve_he.json").write_text(
-        '{"batch": "four", "trickle": {"requests": 1}}')
-    errs = check_docs.check_bench(tmp_path)
+    bench = tmp_path / "BENCH_serve_he.json"
+    bench.write_text("{not json")
+    assert any("invalid JSON" in e for e in check_docs.check_bench(bench))
+    bench.write_text(
+        '{"batch": "four", "trickle": {"requests": 1},'
+        ' "scheduler": {"circuits": 2, "bitwise_identical": false,'
+        '  "scheduled": {"drain_s": 0.1}}}')
+    errs = check_docs.check_bench(bench)
     assert any("batch" in e and "expected int" in e for e in errs)
     assert any("missing key 'overlap'" in e for e in errs)
+    assert any("missing key 'plain'" in e for e in errs)
     assert any("trickle: missing key 'p50_ms'" in e for e in errs)
+    # the scheduler block is schema-checked too, including the per-phase
+    # records and the bitwise guard (a false guard must FAIL the check)
+    assert any("scheduler: missing key 'lookahead'" in e for e in errs)
+    assert any("scheduler.scheduled: missing key 'batches'" in e
+               for e in errs)
+    assert any("changed a result bit" in e for e in errs)
 
 
 def test_ci_runs_the_docs_step():

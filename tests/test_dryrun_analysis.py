@@ -89,14 +89,14 @@ def _serving_lowered(op: str, batch: int = 2):
     from repro.dist import he_pipeline as hp
     from repro.dist.sharding import he_limb_sharding
     from repro.hserve.engine import (
-        make_he_rotate_step, make_rescale_step, make_slot_sum_step,
-        slot_sum_rotations,
+        make_add_plain_step, make_he_rotate_step, make_mul_plain_step,
+        make_rescale_step, make_slot_sum_step, slot_sum_rotations,
     )
 
     params = test_params(logN=4, beta_bits=32)
     st = hp.he_static(params, params.logQ)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    _, t2, ek = hp.he_table_specs(st)         # abstract tables: no twiddle
+    t1, t2, ek = hp.he_table_specs(st)        # abstract tables: no twiddle
     ct_sh = he_limb_sharding(mesh, batch=batch)     # build, pure specs
     ct = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype,
                               sharding=ct_sh)
@@ -111,16 +111,22 @@ def _serving_lowered(op: str, batch: int = 2):
     if op == "rescale":
         step = make_rescale_step(st, mesh, params.logp)
         return jax.jit(step).lower(ct, ct)
+    if op == "mul_plain":
+        step = make_mul_plain_step(st, mesh)
+        return jax.jit(step).lower(t1, ct, ct, ct)
+    if op == "add_plain":
+        step = make_add_plain_step(st, mesh)
+        return jax.jit(step).lower(ct, ct, ct)
     raise ValueError(op)
 
 
 def test_serving_steps_lower_with_abstract_tables():
-    """rotate / slot_sum / rescale lower + compile from he_table_specs
-    alone and produce a full analysis record (the dryrun --he serving
-    cells' contract)."""
+    """rotate / slot_sum / rescale / mul_plain / add_plain lower +
+    compile from he_table_specs alone and produce a full analysis record
+    (the dryrun --he serving cells' contract)."""
     from repro.launch.hlo_analysis import analyze_compiled
 
-    for op in ("rotate", "slot_sum", "rescale"):
+    for op in ("rotate", "slot_sum", "rescale", "mul_plain", "add_plain"):
         lowered = _serving_lowered(op)
         rec = analyze_compiled(lowered, lowered.compile(), 0.0)
         assert set(rec) >= {"flops", "bytes_accessed", "collectives",
@@ -128,6 +134,34 @@ def test_serving_steps_lower_with_abstract_tables():
         assert rec["collectives"]["counts"] is not None, op
         # single-device mesh: nothing should hit the wire
         assert rec["collectives"]["total_bytes"] == 0.0, op
+
+
+def test_plain_ops_have_no_keyswitch_collectives_and_cost_less():
+    """The plaintext-operand ops' acceptance claim, checked on real HLO:
+    neither carries ANY collective bytes (no region-2 key switch —
+    rotate, by contrast, pays the full key-switch chain), add_plain is a
+    bare limb add (orders of magnitude below the NTT ops), and
+    mul_plain's region-1-only FLOPs stay well under rotate's region-2
+    pipeline."""
+    from repro.launch.hlo_analysis import (
+        analyze_compiled, collective_bytes_from_hlo,
+    )
+
+    recs = {}
+    for op in ("rotate", "mul_plain", "add_plain"):
+        lowered = _serving_lowered(op)
+        recs[op] = analyze_compiled(lowered, lowered.compile(), 0.0)
+        # the parser on the pre-partitioning HLO text as well
+        assert collective_bytes_from_hlo(
+            lowered.as_text())["total_bytes"] == 0.0 \
+            or op == "rotate", op
+    for op in ("mul_plain", "add_plain"):
+        assert recs[op]["collectives"]["total_bytes"] == 0.0, op
+        assert not any(recs[op]["collectives"]["counts"].values()), op
+    if recs["rotate"]["flops"] and recs["mul_plain"]["flops"]:
+        assert recs["mul_plain"]["flops"] < recs["rotate"]["flops"]
+    if recs["mul_plain"]["flops"] and recs["add_plain"]["flops"]:
+        assert recs["add_plain"]["flops"] < recs["mul_plain"]["flops"] / 10
 
 
 def test_rescale_step_has_no_collectives_and_fewer_flops():

@@ -27,8 +27,9 @@ from repro.core.rotate import conj_keygen, he_conjugate, he_rotate, \
     rot_keygen
 from repro.dist import he_pipeline as hp
 from repro.hserve import (
-    BatchAssembler, CircuitOp, HEServer, RequestQueue, ServeMetrics,
-    TableCache, degree4_demo_circuit, slot_sum_rotations, validate_circuit,
+    BatchAssembler, CircuitOp, CircuitScheduler, HEServer, RequestQueue,
+    ServeMetrics, TableCache, circuit_schedule, degree4_demo_circuit,
+    slot_sum_rotations, validate_circuit,
 )
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -353,6 +354,128 @@ def test_conjugate_requires_key(keys):
 
 
 # --------------------------------------------------------------------------
+# plaintext-operand ops (this PR): region-1-only mul_plain / add_plain
+# --------------------------------------------------------------------------
+
+def _plain(seed, logq, n=8):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=n) + 1j * rng.normal(size=n)
+    return w, H.encode_plain(w, PARAMS, logq)
+
+
+def test_served_plain_ops_bitwise_equal_core_at_every_level(keys):
+    """mul_plain / add_plain through the server are bitwise identical to
+    core.heaan.he_mul_plain / he_add_plain at every served level, with
+    the right output (logq, logp) metadata — and they need NO keys."""
+    sk, pk, _, _ = keys
+    # a server with NO evk / rotation / conjugation keys at all: the
+    # plaintext ops must still serve (no key switch is their point)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    server = HEServer(PARAMS, mesh=mesh, batch=2)
+    cases = []
+    for i in range(3):
+        logq = PARAMS.logQ - i * PARAMS.logp
+        z, ct = _enc(pk, 80 + i)
+        if logq < PARAMS.logQ:
+            ct = H.he_mod_down(ct, PARAMS, logq)
+        w, pt = _plain(90 + i, logq)
+        cases.append((server.submit_mul_plain(ct, pt),
+                      H.he_mul_plain(ct, pt, PARAMS), ("mul", z * w)))
+        cases.append((server.submit_add_plain(ct, pt),
+                      H.he_add_plain(ct, pt, PARAMS), ("add", z + w)))
+    res = server.drain()
+    for rid, ref, (kind, want) in cases:
+        out = res[rid]
+        assert out.logq == ref.logq and out.logp == ref.logp
+        np.testing.assert_array_equal(np.asarray(out.ax),
+                                      np.asarray(ref.ax))
+        np.testing.assert_array_equal(np.asarray(out.bx),
+                                      np.asarray(ref.bx))
+        dec = H.rescale(out, PARAMS) if kind == "mul" else out
+        got = H.decrypt_message(dec, sk, PARAMS)
+        np.testing.assert_allclose(got, want, atol=1e-2)
+
+
+def test_plain_ops_validation(keys):
+    _, pk, _, _ = keys
+    q = RequestQueue()
+    _, c1 = _enc(pk, 1)
+    _, pt = _plain(2, PARAMS.logQ)
+    with pytest.raises(ValueError, match="plaintext"):
+        q.submit("mul_plain", (c1,))              # no operand
+    with pytest.raises(ValueError, match="pt_logp"):
+        q.submit("mul_plain", (c1,), pt=pt)       # no scale
+    with pytest.raises(ValueError, match="scales differ"):
+        q.submit("add_plain", (c1,), pt=pt,
+                 pt_logp=c1.logp + 1)             # scale mismatch
+    with pytest.raises(ValueError, match="does not cover"):
+        q.submit("mul_plain", (c1,), pt=np.asarray(pt)[:, :1],
+                 pt_logp=PARAMS.log_delta)        # too few limbs
+    q.submit("mul_plain", (c1,), pt=pt, pt_logp=PARAMS.log_delta)
+    q.submit("add_plain", (c1,), pt=pt)           # pt_logp 0 → ct.logp
+    assert len(q.bucket_depths()) == 2            # distinct buckets
+
+
+def test_plain_ops_as_circuit_nodes_bitwise(keys):
+    """An affine-layer-shaped circuit — mul_plain → rescale → add_plain
+    — served via submit_circuit, bitwise equal to the composed core
+    references (and the same under the circuit-aware scheduler)."""
+    sk, pk, _, _ = keys
+    _, x = _enc(pk, 70)
+    w, pt = _plain(71, PARAMS.logQ)
+    logq1 = PARAMS.logQ - PARAMS.logp
+    _, pt2 = _plain(72, logq1)
+    ops = [
+        CircuitOp("mul_plain", ("x",), pt=pt),
+        CircuitOp("rescale", (0,)),
+        CircuitOp("add_plain", (1,), pt=pt2),
+    ]
+    ref = H.he_add_plain(
+        H.rescale(H.he_mul_plain(x, pt, PARAMS), PARAMS), pt2, PARAMS)
+    for schedule in (False, True):
+        server = _server(keys, schedule=schedule)
+        cid = server.submit_circuit(ops, {"x": x})
+        out = server.drain()[cid]
+        assert out.logq == ref.logq and out.logp == ref.logp
+        np.testing.assert_array_equal(np.asarray(out.ax),
+                                      np.asarray(ref.ax))
+        np.testing.assert_array_equal(np.asarray(out.bx),
+                                      np.asarray(ref.bx))
+
+
+def test_circuit_validates_plain_ops(keys):
+    _, pk, _, _ = keys
+    _, x = _enc(pk, 1)
+    meta = {"x": (x.logq, x.logp)}
+    _, pt = _plain(2, PARAMS.logQ)
+    with pytest.raises(ValueError, match="plaintext"):
+        validate_circuit([CircuitOp("mul_plain", ("x",))], meta, PARAMS)
+    # a plaintext encoded at a LOWER level than the node's input must be
+    # rejected up front — otherwise queue.submit raises mid-drain from
+    # _submit_ready, stranding the circuit with siblings already served
+    _, pt_low = _plain(3, PARAMS.logQ - 3 * PARAMS.logp)
+    with pytest.raises(ValueError, match="does not cover"):
+        validate_circuit([CircuitOp("mul", ("x", "x")),
+                          CircuitOp("rescale", (0,)),
+                          CircuitOp("mul_plain", (1,), pt=pt_low)],
+                         meta, PARAMS)
+    with pytest.raises(ValueError, match="scales differ"):
+        validate_circuit([CircuitOp("add_plain", ("x",), pt=pt,
+                                    pt_logp=x.logp + 1)], meta, PARAMS)
+    # negative pt_logp must fail HERE, not from queue.submit mid-drain
+    with pytest.raises(ValueError, match="negative mul_plain"):
+        validate_circuit([CircuitOp("mul_plain", ("x",), pt=pt,
+                                    pt_logp=-1)], meta, PARAMS)
+    out = validate_circuit(
+        [CircuitOp("mul_plain", ("x",), pt=pt),
+         CircuitOp("rescale", (0,))], meta, PARAMS)
+    # mul_plain doubles the scale (pt at log_delta), rescale drops one
+    assert out[0] == (PARAMS.logQ, x.logp + PARAMS.log_delta)
+    assert out[1] == (PARAMS.logQ - PARAMS.logp,
+                      x.logp + PARAMS.log_delta - PARAMS.logp)
+
+
+# --------------------------------------------------------------------------
 # circuits: server-side op-DAG walk with level tracking
 # --------------------------------------------------------------------------
 
@@ -450,6 +573,168 @@ def test_circuit_validation_rejects_before_enqueue(keys, ck):
 
 
 # --------------------------------------------------------------------------
+# circuit-aware scheduler (this PR's tentpole): lookahead co-batching,
+# prefetch, and the drain-vs-circuit deadlock regression
+# --------------------------------------------------------------------------
+
+def test_circuit_schedule_predicts_actual_bucket_keys(keys):
+    """The schedule the scheduler looks ahead at must be EXACTLY the
+    bucket keys the nodes' requests land in — key drift would defer
+    buckets for siblings that never arrive."""
+    _, pk, _, _ = keys
+    _, x = _enc(pk, 1)
+    _, pt = _plain(2, PARAMS.logQ)
+    lq = PARAMS.logQ - 2 * PARAMS.logp
+    ops = [
+        CircuitOp("mul", ("x", "x")),
+        CircuitOp("rescale", (0,)),
+        CircuitOp("mul_plain", (1,), pt=np.asarray(pt)[
+            :, :PARAMS.qlimbs(PARAMS.logQ - PARAMS.logp)],
+            pt_logp=x.logp),
+        CircuitOp("rescale", (2,)),
+        CircuitOp("mod_down", ("x",), logq2=lq),
+        CircuitOp("rotate", (4,), r=1),
+        CircuitOp("slot_sum", (5,)),
+        CircuitOp("conjugate", (6,)),
+        CircuitOp("add", (3, 7)),
+    ]
+    meta = {"x": (x.logq, x.logp)}
+    _, predicted, nslots = circuit_schedule(ops, meta, {"x": x.n_slots},
+                                            PARAMS)
+    assert nslots == [8] * 9
+    # replay every node through a real queue as its operands would
+    # resolve, and compare the actual bucket keys (metadata-faithful
+    # zero ciphertexts stand in for node outputs)
+    node_meta = validate_circuit(ops, meta, PARAMS)
+    from repro.core.cipher import Ciphertext as CT
+    values = {"x": x}
+    q = RequestQueue()
+    for i, node in enumerate(ops):
+        cts = tuple(values[a] for a in node.args)
+        dlogp = node.dlogp or (PARAMS.logp if node.op == "rescale" else 0)
+        rid = q.submit(node.op, cts, r=node.r, dlogp=dlogp,
+                       logq2=node.logq2, pt=node.pt,
+                       pt_logp=node.pt_logp
+                       or (PARAMS.log_delta
+                           if node.op == "mul_plain" else 0))
+        (key, reqs), = ((k, d) for k, d in q._buckets.items()
+                        if any(r.rid == rid for r in d))
+        assert key == predicted[i], (i, node.op, key, predicted[i])
+        q.pop_bucket(key, 8)
+        lq_i, lp_i = node_meta[i]
+        k = PARAMS.qlimbs(lq_i)
+        z = jnp.zeros((PARAMS.N, k), dtype=np.asarray(x.ax).dtype)
+        values[i] = CT(ax=z, bx=z, logq=lq_i, logp=lp_i, n_slots=8)
+
+
+def test_scheduler_lookahead_expectations():
+    """Unit-level: expectations count pending same-key nodes within the
+    horizon, shrink as nodes enqueue/complete, and vanish when the
+    circuit finishes (dangling nodes must not defer buckets forever)."""
+    s = CircuitScheduler(lookahead=2)
+    K0, K1 = ("mul", 120, None), ("rescale", 120, 30)
+    # chain: n0 -> n1 -> n2 (n0/n2 share K0), n3 dangling on n0
+    s.register(7, [K0, K1, K0, K1], [(), (0,), (1,), (0,)])
+    # n0 is 1 step away (source, not yet enqueued); n2 is 3 away (> 2)
+    assert s.expected_within(K0) == 1
+    s.on_enqueued(7, 0)
+    assert s.expected_within(K0) == 1      # n2 is 2 batches away
+    assert s.expected_within(K0, horizon=1) == 0
+    assert s.expected_within(K1) == 2      # n1 (1 away) + n3 (1 away)
+    s.on_completed(7, 0)
+    s.on_enqueued(7, 1)
+    assert s.expected_within(K0, horizon=1) == 1   # n2 now 1 away
+    s.on_completed(7, 1)
+    s.on_enqueued(7, 2)
+    assert s.expected_within(K0) == 0
+    s.on_completed(7, 2)
+    s.on_finished(7)                        # n3 never ran (dangling)
+    assert s.expected_within(K1) == 0
+    assert s.stats()["circuits_tracked"] == 0
+
+
+def test_drain_completes_2deep_samekey_circuit_regression(keys):
+    """The drain-vs-circuit deadlock: in [mul(x,x), mul(0,0)] BOTH nodes
+    share one bucket key, so the only non-empty bucket 'expects a
+    sibling' whose parent is the bucket itself — a deferral policy
+    without the progress guarantee never serves it and drain() spins.
+    Submitted right before drain(), under the scheduler, it must
+    complete (and stay bitwise): fails on the pre-PR server."""
+    _, pk, evk, _ = keys
+    for overlap in (False, True):
+        server = _server(keys, schedule=True, overlap=overlap)
+        _, x = _enc(pk, 31)
+        cid = server.submit_circuit(
+            [CircuitOp("mul", ("x", "x")), CircuitOp("mul", (0, 0))],
+            {"x": x})
+        res = server.drain()
+        assert server._inflight is None and not server._circuits
+        r0 = H.he_mul(x, x, evk, PARAMS)
+        ref = H.he_mul(r0, r0, evk, PARAMS)
+        np.testing.assert_array_equal(np.asarray(res[cid].ax),
+                                      np.asarray(ref.ax))
+        np.testing.assert_array_equal(np.asarray(res[cid].bx),
+                                      np.asarray(ref.bx))
+        assert server.scheduler.deferrals >= 1   # it DID defer, once,
+        # then the progress guarantee flushed the bucket anyway
+
+
+def test_scheduler_cobatches_staggered_circuits_and_stays_bitwise(keys, ck):
+    """Two degree-4 circuits submitted one engine batch out of phase:
+    unscheduled they trail each other with padded batches; scheduled,
+    the lookahead deferral re-syncs them (cross-circuit co-batch rate
+    up, mul padding no worse) without changing a single bit."""
+    _, pk, _, _ = keys
+    ops, _ = degree4_demo_circuit(PARAMS)
+    outs, cob, pads = {}, {}, {}
+    for schedule in (False, True):
+        server = _server(keys, ck, schedule=schedule)
+        _, x1 = _enc(pk, 60)
+        _, x2 = _enc(pk, 61)
+        c1 = server.submit_circuit(ops, {"x": x1})
+        server.poll(flush=True)               # desync the pair
+        c2 = server.submit_circuit(ops, {"x": x2})
+        res = server.drain()
+        s = server.stats()
+        outs[schedule] = (res[c1], res[c2])
+        cob[schedule] = s["cobatch"]
+        pads[schedule] = s["per_op"]["mul"]["pad_frac"]
+    # scheduled == unscheduled == the composed single-device core refs
+    refs = [_degree4_reference(_enc(pk, s)[1], keys[2], ck)
+            for s in (60, 61)]
+    for got in (outs[False], outs[True]):
+        for out, ref in zip(got, refs):
+            np.testing.assert_array_equal(np.asarray(out.ax),
+                                          np.asarray(ref.ax))
+            np.testing.assert_array_equal(np.asarray(out.bx),
+                                          np.asarray(ref.bx))
+    assert cob[True]["cross_circuit_batches"] > \
+        cob[False]["cross_circuit_batches"]
+    assert cob[True]["cross_circuit_rate"] > cob[False]["cross_circuit_rate"]
+    assert pads[True] <= pads[False]
+
+
+def test_scheduler_prefetches_next_levels(keys, ck):
+    """Dispatching a level-dropping batch prefetches the successor
+    levels' table slices while the batch is in flight — the cache rows
+    exist BEFORE the successor node's step ever runs."""
+    _, pk, _, _ = keys
+    server = _server(keys, ck, schedule=True)
+    _, x = _enc(pk, 62)
+    lq = PARAMS.logQ - PARAMS.logp
+    cid = server.submit_circuit(
+        [CircuitOp("mul", ("x", "x")), CircuitOp("rescale", (0,)),
+         CircuitOp("conjugate", (1,))], {"x": x})
+    assert not server.cache.has_level(lq)
+    server.poll(flush=True)                   # runs the mul; prefetches
+    assert server.cache.has_level(lq)         # before rescale/conj run
+    assert server.scheduler.prefetches >= 1
+    assert lq in server.scheduler.prefetched_levels
+    res = server.drain()
+    assert cid in res
+
+
+# --------------------------------------------------------------------------
 # continuous batching: age-based flush under a trickle (fake clock)
 # --------------------------------------------------------------------------
 
@@ -487,6 +772,85 @@ def test_trickle_served_within_age_deadline_fake_clock(keys):
     assert s["per_op"]["mul"]["pad_frac"] == 0.5
     # latency is measured on the same clock: submit 0.0 → complete 5.0
     assert s["per_op"]["mul"]["latency_ms"]["p50"] == pytest.approx(5000.0)
+
+
+def test_queue_submit_stamps_with_injected_clock(keys):
+    """Bugfix regression: RequestQueue.submit's default t_submit must
+    come from the queue's (injected) clock, not a module-level time
+    call — direct queue submits on a fake-clock server otherwise stamp
+    wall-clock times and skew every age-based flush decision. Fails on
+    the pre-PR code (t_submit was time.perf_counter())."""
+    _, pk, _, _ = keys
+    now = [123.0]
+    server = _server(keys, clock=lambda: now[0])
+    _, c1 = _enc(pk, 5)
+    _, c2 = _enc(pk, 6)
+    server.queue.submit("mul", (c1, c2))      # direct, no t_submit
+    rid2 = server.submit_mul(c1, c2)          # via the server
+    reqs = server.queue.pop_bucket(("mul", PARAMS.logQ, None), 4)
+    assert [r.t_submit for r in reqs] == [123.0, 123.0]
+    assert reqs[1].rid == rid2
+    # a standalone queue with its own injected clock behaves the same
+    q = RequestQueue(clock=lambda: 7.0)
+    q.submit("mul", (c1, c2))
+    assert q.pop_bucket(("mul", PARAMS.logQ, None), 1)[0].t_submit == 7.0
+
+
+def test_arrival_rate_decays_after_idle_gap():
+    """Bugfix regression (queue level): with `now` and a decay window,
+    arrivals older than the window are dropped, so the estimate reflects
+    current traffic; one in-window arrival reports the sparse floor."""
+    q = RequestQueue()
+    for i in range(64):
+        q._arrivals.append(i * 0.5)           # 2/s burst ending at 31.5
+    assert q.arrival_rate() == pytest.approx(2.0)
+    # idle gap: at t=50 with a 16 s window the burst is stale
+    assert q.arrival_rate(now=50.0, window_s=16.0) is None
+    assert len(q._arrivals) == 0              # window physically decayed
+    q._arrivals.append(50.0)
+    assert q.arrival_rate(now=50.0, window_s=16.0) \
+        == pytest.approx(1 / 16.0)            # sparse-traffic floor
+    # two arrivals on one (coarse/fake) clock tick must still count —
+    # span == 0 on the decayed path may not fall back to None, or the
+    # target re-inflates to a full batch with MORE traffic evidence
+    q._arrivals.append(50.0)
+    assert q.arrival_rate(now=50.0, window_s=16.0) \
+        == pytest.approx(2 / 16.0)
+    q._arrivals.append(54.0)
+    assert q.arrival_rate(now=54.0, window_s=16.0) == pytest.approx(0.5)
+
+
+def test_post_idle_trickle_flushes_at_adapted_target(keys):
+    """Bugfix regression (server level): after a burst and an idle gap,
+    a trickle request must flush at the adapted target immediately —
+    pre-PR the arrival window kept the burst forever, the target stayed
+    inflated, and every post-idle trickle request waited the full
+    max_age_s before the age deadline flushed it."""
+    _, _, evk, rks = keys
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    now = [0.0]
+    server = HEServer(PARAMS, evk, rks, mesh=mesh, batch=4,
+                      max_age_s=2.0, clock=lambda: now[0])
+    _, c1 = _enc(keys[1], 5)
+    _, c2 = _enc(keys[1], 6)
+    # burst: 64 requests at 2/s (span 31.5 s), all drained
+    for i in range(64):
+        now[0] = i * 0.5
+        server.submit_mul(c1, c2)
+    server.drain()
+    server.reset_metrics()
+    # idle gap, then a lone trickle request at t=50: the decayed rate
+    # puts the target at 1, so it flushes on the next poll as "full" —
+    # NOT after the 2 s age deadline
+    now[0] = 50.0
+    rid = server.submit_mul(c1, c2)
+    assert server._bucket_target() == 1
+    done = server.poll()
+    assert [r for r, _ in done] == [rid]
+    s = server.stats()
+    assert s["flushes"]["age"] == 0
+    # latency: served at submit time, not submit + max_age_s
+    assert s["per_op"]["mul"]["latency_ms"]["max"] < 2000.0
 
 
 def test_adaptive_bucket_target_flushes_below_batch(keys):
@@ -650,6 +1014,15 @@ def test_hserve_ops_bitwise_on_8_device_mesh():
             acc = H.he_add(acc, he_rotate(acc, r, rks[r], params))
         cases.append((server.submit_slot_sum(cs), acc))
 
+        # plaintext-operand ops: region-1-only, sharded, bitwise
+        zp = rng.normal(size=n) + 1j * rng.normal(size=n)
+        pt = H.encode_plain(zp, params, params.logQ)
+        cp = enc(45)
+        cases.append((server.submit_mul_plain(cp, pt),
+                      H.he_mul_plain(cp, pt, params)))
+        cases.append((server.submit_add_plain(cp, pt),
+                      H.he_add_plain(cp, pt, params)))
+
         # degree-4 polynomial circuit, wholly server-side on the mesh
         # (the same shared acceptance circuit serve --circuit runs)
         from repro.hserve import degree4_demo_circuit
@@ -663,16 +1036,43 @@ def test_hserve_ops_bitwise_on_8_device_mesh():
             r2, H.he_mod_down(x, params, lq))))
 
         res = server.drain()
+
+        # the SAME degree-4 circuit under the circuit-aware scheduler
+        # (co-batch deferral + table prefetch) must be bitwise identical
+        # to the unscheduled serve above — scheduling reorders flushes,
+        # never results. Same warm server: no recompilation.
+        server.schedule = True
+        x2 = enc(51)
+        cid2a = server.submit_circuit(ops, inputs={"x": x2})
+        server.poll(flush=True)                  # desync the pair
+        cid2b = server.submit_circuit(ops, inputs={"x": x2})
+        res2 = server.drain()
+        sr0 = H.rescale(H.he_mul(x2, x2, evk, params), params)
+        sr1 = H.rescale(H.he_mul(sr0, sr0, evk, params), params)
+        sr2 = he_conjugate(H.he_mod_down(sr1, params, lq), ckey, params)
+        sref = H.he_add(sr2, H.he_mod_down(x2, params, lq))
+        sched_ok = all(
+            bool((np.asarray(res2[c].ax) == np.asarray(sref.ax)).all()
+                 and (np.asarray(res2[c].bx) == np.asarray(sref.bx)).all())
+            for c in (cid2a, cid2b))
+
         ok = all(
             bool((np.asarray(res[rid].ax) == np.asarray(ref.ax)).all()
                  and (np.asarray(res[rid].bx) == np.asarray(ref.bx)).all())
             for rid, ref in cases)
+        st = server.stats()
         print(json.dumps({
-            "ok": ok, "devices": len(jax.devices()),
-            "levels": server.stats()["levels_served"],
-            "steps": server.stats()["engine"]["steps_compiled"]}))
+            "ok": ok, "sched_ok": sched_ok,
+            "cross_circuit": st["cobatch"]["cross_circuit_batches"],
+            "devices": len(jax.devices()),
+            "levels": st["levels_served"],
+            "steps": st["engine"]["steps_compiled"]}))
     """)
     assert res["devices"] == 8
-    assert res["steps"] >= 8
+    assert res["steps"] >= 10
     assert len(res["levels"]) >= 3
     assert res["ok"], "sharded hserve op diverged from core reference"
+    assert res["sched_ok"], \
+        "scheduled circuit diverged from the unscheduled/core reference"
+    assert res["cross_circuit"] > 0, \
+        "staggered circuits never co-batched under the scheduler"

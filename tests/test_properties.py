@@ -96,3 +96,157 @@ def test_eval_domain_add_is_homomorphic(pair):
     # additive homomorphism holds exactly when no q-overflow occurred
     if a + b < (1 << PARAMS.logQ):
         np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+# --------------------------------------------------------------------------
+# circuit-aware scheduler invariants (repro.hserve): co-batching never
+# merges bucket keys, and per-circuit execution order stays topological
+# --------------------------------------------------------------------------
+
+def _fake_hserver(schedule: bool, batch: int):
+    """A real HEServer whose OpEngine is replaced by a metadata-faithful
+    fake: outputs are zero ciphertexts with each op's (logq, logp) rules
+    applied, so queue + scheduler + server logic runs EXACTLY as in
+    production with no jit compiles. The fake asserts the co-batch
+    invariant (one bucket key per dispatched batch) and logs execution
+    order as (cid, node) tags."""
+    import jax as _jax
+
+    from repro.core.cipher import Ciphertext
+    from repro.core.keys import keygen
+    from repro.core.rotate import conj_keygen
+    from repro.hserve import HEServer, Inflight
+
+    if not hasattr(_fake_hserver, "_keys"):
+        sk, pk, evk = keygen(PARAMS, seed=0)
+        _fake_hserver._keys = (sk, pk, evk, conj_keygen(PARAMS, sk))
+    sk, pk, evk, ck = _fake_hserver._keys
+    mesh = _jax.make_mesh((1, 1), ("data", "model"))
+    server = HEServer(PARAMS, evk, None, ck, mesh=mesh, batch=batch,
+                      schedule=schedule, prefetch=False)
+
+    class FakeEngine:
+        n_compiled = 0
+        compile_s = 0.0
+
+        def __init__(self):
+            self.batches = []        # [(key, [tag-or-None, ...])]
+
+        def dispatch(self, b):
+            assert all(r.bucket_key == b.key for r in b.requests), \
+                "co-batching merged requests with different bucket keys"
+            return Inflight(batch=b, ax=None, bx=None, t0=0.0)
+
+        def wait(self, inf):
+            b = inf.batch
+            # the rid->node map is popped in _complete, AFTER wait
+            self.batches.append(
+                (b.key, [server._node_of_rid.get(r.rid)
+                         for r in b.requests]))
+            outs = []
+            for r in b.requests:
+                c0 = r.cts[0]
+                logq, logp = c0.logq, c0.logp
+                if r.op == "mul":
+                    logp += r.cts[1].logp
+                elif r.op == "mul_plain":
+                    logp += r.pt_logp
+                elif r.op == "rescale":
+                    logq, logp = logq - r.dlogp, logp - r.dlogp
+                elif r.op == "mod_down":
+                    logq = r.logq2
+                z = jnp.zeros((PARAMS.N, PARAMS.qlimbs(logq)),
+                              dtype=np.uint32)
+                outs.append(Ciphertext(ax=z, bx=z, logq=logq, logp=logp,
+                                       n_slots=c0.n_slots))
+            return outs, 0.0
+
+    server.engine = FakeEngine()
+    return server, pk
+
+
+_CHAIN_OPS = st.lists(st.sampled_from(["mul", "rescale", "mod_down",
+                                       "conjugate", "mul_plain"]),
+                      min_size=1, max_size=6)
+
+
+@given(chains=st.lists(_CHAIN_OPS, min_size=2, max_size=4),
+       staggers=st.lists(st.integers(min_value=0, max_value=2),
+                         min_size=2, max_size=4),
+       batch=st.integers(min_value=2, max_value=4),
+       schedule=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_scheduler_never_merges_keys_and_preserves_topo_order(
+        chains, staggers, batch, schedule):
+    """For random circuit chains submitted with random stagger, under
+    both flush policies: (a) every dispatched batch holds ONE bucket
+    key, (b) each circuit's nodes execute in topological order, and
+    (c) drain() terminates with every circuit completed (the scheduler's
+    progress guarantee — a deferral policy without it deadlocks on
+    same-key parent/child chains)."""
+    from repro.core import heaan as H
+    from repro.hserve import CircuitOp
+
+    server, pk = _fake_hserver(schedule, batch)
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=8) + 1j * rng.normal(size=8)
+    x = H.encrypt_message(z, pk, PARAMS, seed=1)
+    pt_top = {}
+
+    def build(chain):
+        ops, logq = [], PARAMS.logQ
+        for kind in chain:
+            prev = len(ops) - 1 if ops else "x"
+            if kind == "rescale" and logq - PARAMS.logp <= 0:
+                kind = "conjugate"
+            if kind == "mod_down" and logq - PARAMS.logp <= 0:
+                kind = "conjugate"
+            if kind == "mul":
+                ops.append(CircuitOp("mul", (prev, prev)))
+            elif kind == "mul_plain":
+                if logq not in pt_top:
+                    pt_top[logq] = H.encode_plain(z, PARAMS, logq)
+                ops.append(CircuitOp("mul_plain", (prev,),
+                                     pt=pt_top[logq]))
+            elif kind == "rescale":
+                ops.append(CircuitOp("rescale", (prev,)))
+                logq -= PARAMS.logp
+            elif kind == "mod_down":
+                ops.append(CircuitOp("mod_down", (prev,),
+                                     logq2=logq - PARAMS.logp))
+                logq -= PARAMS.logp
+            else:
+                ops.append(CircuitOp("conjugate", (prev,)))
+        return ops
+
+    cids, results, built = [], {}, {}
+    for chain, stagger in zip(chains, staggers):
+        ops = build(chain)
+        cid = server.submit_circuit(ops, {"x": x})
+        cids.append(cid)
+        built[cid] = ops
+        for _ in range(stagger):
+            results.update(dict(server.poll(flush=True)))
+    # bounded drain: a deadlock shows as exhaustion, not a hang
+    for _ in range(300):
+        if not (server.queue.depth or server._inflight is not None
+                or server._circuits):
+            break
+        results.update(dict(server.poll(flush=True)))
+    assert not server._circuits, "drain did not complete every circuit"
+    assert server.queue.depth == 0
+    assert all(cid in results for cid in cids)
+    # per-circuit topological order over the logged execution tags
+    done = [t for _key, tags in server.engine.batches
+            for t in tags if t is not None]
+    pos = {t: i for i, t in enumerate(done)}
+    for cid, ops in built.items():
+        for i, node in enumerate(ops):
+            if (cid, i) not in pos:
+                continue                  # padded-out / never-needed
+            for a in node.args:
+                if isinstance(a, int):
+                    assert (cid, a) in pos, \
+                        f"node ({cid},{i}) ran but its arg {a} never did"
+                    assert pos[(cid, a)] < pos[(cid, i)], \
+                        f"node ({cid},{i}) ran before its arg {a}"

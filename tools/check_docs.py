@@ -50,12 +50,24 @@ BENCH_SCHEMA = {
     "drain_wall_s": NUM,
     "trickle": dict,
     "overlap": dict,
+    "plain": dict,
+    "scheduler": dict,
 }
 PARAMS_KEYS = ("logN", "logQ", "logp", "beta_bits")
 TRICKLE_SCHEMA = {"requests": int, "max_age_s": NUM, "p50_ms": NUM,
                   "p99_ms": NUM, "age_flushes": int}
 OVERLAP_SCHEMA = {"muls": int, "off_drain_s": NUM, "on_drain_s": NUM,
                   "speedup": NUM}
+PLAIN_SCHEMA = {"requests": int, "mul_plain_per_s": NUM,
+                "add_plain_per_s": NUM, "mul_plain_vs_mul": NUM}
+SCHEDULER_SCHEMA = {"circuits": int, "lookahead": int,
+                    "unscheduled": dict, "scheduled": dict,
+                    "bitwise_identical": bool}
+# per-phase record inside scheduler.{unscheduled,scheduled}
+SCHED_PHASE_SCHEMA = {"drain_s": NUM, "batches": int, "mul_pad_frac": NUM,
+                      "cross_circuit_batches": int,
+                      "cross_circuit_rate": NUM, "deferrals": int,
+                      "prefetches": int}
 
 
 def check_links(repo: Path) -> list:
@@ -91,8 +103,7 @@ def _check_block(obj: dict, schema: dict, where: str) -> list:
     return errors
 
 
-def check_bench(repo: Path) -> list:
-    bench = repo / "BENCH_serve_he.json"
+def check_bench(bench: Path) -> list:
     if not bench.exists():
         return [f"{bench.name}: file missing"]
     try:
@@ -110,6 +121,21 @@ def check_bench(repo: Path) -> list:
     if isinstance(obj.get("overlap"), dict):
         errors += _check_block(obj["overlap"], OVERLAP_SCHEMA,
                                f"{bench.name}.overlap")
+    if isinstance(obj.get("plain"), dict):
+        errors += _check_block(obj["plain"], PLAIN_SCHEMA,
+                               f"{bench.name}.plain")
+    if isinstance(obj.get("scheduler"), dict):
+        sch = obj["scheduler"]
+        errors += _check_block(sch, SCHEDULER_SCHEMA,
+                               f"{bench.name}.scheduler")
+        for phase in ("unscheduled", "scheduled"):
+            if isinstance(sch.get(phase), dict):
+                errors += _check_block(
+                    sch[phase], SCHED_PHASE_SCHEMA,
+                    f"{bench.name}.scheduler.{phase}")
+        if sch.get("bitwise_identical") is False:
+            errors.append(f"{bench.name}.scheduler: scheduling changed "
+                          "a result bit (bitwise_identical false)")
     return errors
 
 
@@ -117,12 +143,21 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--repo", default=Path(__file__).resolve().parent.parent,
                     type=Path, help="repo root (default: this file's ../)")
+    ap.add_argument("--bench", default=None, type=Path,
+                    help="validate THIS bench JSON instead of the "
+                         "committed BENCH_serve_he.json (and skip the "
+                         "link check) — CI schema-drift gate for freshly "
+                         "emitted files")
     args = ap.parse_args(argv)
-    errors = check_links(args.repo) + check_bench(args.repo)
+    if args.bench is not None:
+        errors = check_bench(args.bench)
+    else:
+        errors = check_links(args.repo) \
+            + check_bench(args.repo / "BENCH_serve_he.json")
     for e in errors:
         print(e)
     if not errors:
-        print("docs OK: links resolve, BENCH_serve_he.json matches the "
+        print("docs OK: links resolve, bench JSON matches the "
               "documented schema")
     return 1 if errors else 0
 
