@@ -18,7 +18,14 @@ additions, schema documented in docs/SERVING.md):
     circuits submitted one engine batch out of phase, drained with
     scheduling off vs on: cross-circuit co-batch rate, mul padding
     fraction, deferral/prefetch counts, and a bitwise-identical guard
-    (scheduling must never change a result bit).
+    (scheduling must never change a result bit);
+  - "client": the repro.client traced-session A/B — the same
+    (x·w)·x + x circuit submitted as hand-built CircuitOp lists (one
+    client-side encode of w PER circuit) vs. traced handles through
+    HESession.run (w encodes once; later circuits ship hash-only and
+    hit the server's (hash, level) plaintext cache): drain walls,
+    mul pad fraction, cross-circuit co-batch rate, cache hit rate, and
+    a bitwise-identical guard (the frontend must never change a bit).
 
     PYTHONPATH=src python benchmarks/serve_he.py                # quick
     PYTHONPATH=src python benchmarks/serve_he.py --full         # Table III
@@ -173,6 +180,67 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
         for a, b in zip(outs_u, outs_s))
     assert bitwise, "scheduling changed a result bit"
 
+    # ---- client: traced session vs hand-built circuits -----------------
+    from repro.client import HESession
+    from repro.core.encoding import message_hash
+    from repro.hserve import CircuitOp
+
+    session = HESession(params, sk=sk, pk=pk, evk=evk, server=server)
+    k = max(2, min(4, len(top)))
+    wz = rng.normal(size=n) + 1j * rng.normal(size=n)
+    lq1, lq2 = params.logQ - params.logp, params.logQ - 2 * params.logp
+
+    def hand_ops():
+        # what PR-4 clients wrote by hand for (x·w)·x + x: explicit
+        # level management, integer node refs, and a fresh client-side
+        # encode of w for EVERY circuit
+        pt = np.asarray(H.encode_plain(wz, params, params.logQ))
+        return [
+            CircuitOp("mul_plain", ("in0",), pt=pt,
+                      pt_logp=params.log_delta),
+            CircuitOp("rescale", (0,), dlogp=params.logp),
+            CircuitOp("mod_down", ("in0",), logq2=lq1),
+            CircuitOp("mul", (1, 2)),
+            CircuitOp("rescale", (3,), dlogp=params.logp),
+            CircuitOp("mod_down", ("in0",), logq2=lq2),
+            CircuitOp("add", (4, 5)),
+        ]
+
+    # warm pass compiles the circuit's (op, level) signatures so BOTH
+    # phases are steady state (same methodology as the main stream)
+    server.submit_circuit(hand_ops(), {"in0": top[0]})
+    server.drain()
+
+    server.reset_metrics()
+    t0 = time.perf_counter()
+    hand_cids = [server.submit_circuit(hand_ops(),
+                                       {"in0": top[i % len(top)]})
+                 for i in range(k)]
+    hand_res = server.drain()
+    hand_s = time.perf_counter() - t0
+    hand_stats = server.stats()
+
+    server.reset_metrics()
+    h0, m0 = server.cache.plain_hits, server.cache.plain_misses
+    t0 = time.perf_counter()
+    exprs = []
+    for i in range(k):
+        x = session.input(top[i % len(top)])
+        exprs.append((x * wz) * x + x)
+    tfuts = session.run(exprs)          # w encodes ONCE; rest hash-only
+    session.drain()
+    traced_s = time.perf_counter() - t0
+    tr_stats = server.stats()
+    hits = server.cache.plain_hits - h0
+    total = hits + server.cache.plain_misses - m0
+    client_bitwise = all(
+        bool((np.asarray(hand_res[c].ax) == np.asarray(f.result().ax))
+             .all()
+             and (np.asarray(hand_res[c].bx)
+                  == np.asarray(f.result().bx)).all())
+        for c, f in zip(hand_cids, tfuts))
+    assert client_bitwise, "the traced frontend changed a result bit"
+
     # ---- trickle: arrival rate < batch; only the age policy flushes.
     # adaptive_target is disabled here on purpose: with it on, a trickle
     # is released the moment the target shrinks to the arrival rate and
@@ -239,6 +307,21 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
             "unscheduled": unsched,
             "scheduled": sched,
             "bitwise_identical": bitwise,
+        },
+        "client": {
+            "circuits": k,
+            "hand_drain_s": round(hand_s, 4),
+            "traced_drain_s": round(traced_s, 4),
+            "hand_mul_pad_frac":
+                hand_stats["per_op"]["mul"]["pad_frac"],
+            "traced_mul_pad_frac":
+                tr_stats["per_op"]["mul"]["pad_frac"],
+            "cross_circuit_rate":
+                tr_stats["cobatch"]["cross_circuit_rate"],
+            "plain_cache_hits": hits,
+            "plain_cache_hit_rate":
+                round(hits / total, 3) if total else 0.0,
+            "bitwise_identical": client_bitwise,
         },
     }
 

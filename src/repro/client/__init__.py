@@ -1,0 +1,47 @@
+"""repro.client — the traced CipherHandle/HESession user API.
+
+The paper's workloads (§III–V) are chained op-DAGs at descending levels,
+and PR 3–4 taught the server to evaluate whole circuits with
+cross-circuit co-batching — but writing `CircuitOp` lists with integer
+node refs and manual (logq, logp) bookkeeping is evaluator assembly.
+This package is the compiler-style frontend production HE stacks put on
+top (SEAL's Evaluator object model, nGraph-HE's graph-compiled
+inference; PAPERS.md):
+
+  - :mod:`repro.client.handles` — `CipherHandle` / `PlainHandle`:
+    overloaded `* + - conj() rotate(r) slot_sum()` lazily trace an
+    op-DAG; plain–plain arithmetic constant-folds eagerly.
+  - :mod:`repro.client.compile` — the lowering pass: auto
+    rescale/mod_down level alignment, CSE, plaintext-cache-aware
+    operand encoding; emits a validated `CircuitOp` list.
+  - :mod:`repro.client.session` — `HESession` owns keys +
+    encrypt/decrypt and an `HEServer`; `run()` returns `CipherFuture`s
+    so many traced circuits co-batch through one drain.
+  - :mod:`repro.client.testing` — deterministic random traced
+    expressions with plaintext shadows (property tests, mesh harnesses,
+    benchmarks).
+
+Quickstart (see docs/API.md for the full contract)::
+
+    from repro.client import HESession
+    from repro.core.params import test_params
+
+    session = HESession(test_params(logN=5, beta_bits=32), seed=0)
+    x = session.encrypt(z)                    # traced input handle
+    y = ((x * x) * w + x).rotate(1).conj().slot_sum()
+    vals = session.decrypt(y)                 # compile → serve → decrypt
+
+The old per-op helpers (``HEServer.submit_mul`` et al.) remain as thin
+wrappers over the same queue for benchmarks and tests.
+"""
+
+from repro.client.compile import CompiledCircuit, compile_handle  # noqa: F401
+from repro.client.handles import (  # noqa: F401
+    CipherHandle, PlainHandle, as_plain,
+)
+from repro.client.session import CipherFuture, HESession  # noqa: F401
+
+__all__ = [
+    "HESession", "CipherHandle", "PlainHandle", "CipherFuture",
+    "CompiledCircuit", "compile_handle", "as_plain",
+]

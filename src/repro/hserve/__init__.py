@@ -70,6 +70,11 @@ Plain per-op serving and the CLI driver still work::
     PYTHONPATH=src python -m repro.launch.serve --he --batch 8 \\
         --requests 24 --levels 3 --rotations 4 [--kernels] [--overlap]
 
+Most users should not write CircuitOp lists by hand: `repro.client`'s
+HESession/CipherHandle frontend traces plain arithmetic and compiles it
+to these circuits (auto level alignment, CSE, plaintext-operand
+caching) — see docs/API.md. This module is the serving substrate.
+
 See docs/SERVING.md for the lifecycle and every knob.
 """
 

@@ -32,7 +32,7 @@ from repro.core.params import HEParams
 from repro.hserve.queue import OPS, PLAIN_OPS
 
 __all__ = ["CircuitOp", "validate_circuit", "circuit_schedule",
-           "degree4_demo_circuit"]
+           "degree4_demo_circuit", "execute_circuit_reference"]
 
 NodeRef = Union[int, str]
 
@@ -46,7 +46,11 @@ def degree4_demo_circuit(params: HEParams):
     and the bitwise acceptance tests so all of them verify the SAME
     circuit; decrypts to conj(z⁴) + z."""
     logq_md = params.logQ - 3 * params.logp
-    assert logq_md > 0, "degree-4 demo circuit needs depth L >= 4"
+    if logq_md <= 0:                    # not assert: gone under python -O
+        raise ValueError(
+            f"degree-4 demo circuit needs depth L >= 4 "
+            f"(logQ={params.logQ}, logp={params.logp} gives only "
+            f"L={params.L})")
     return [
         CircuitOp("mul", ("x", "x")),
         CircuitOp("rescale", (0,)),
@@ -72,9 +76,16 @@ class CircuitOp:
     logq2: target modulus for "mod_down".
     pt:    encoded plaintext operand for "mul_plain"/"add_plain" —
            (N, qlimbs) mod-q limbs at the node's input level
-           (core.heaan.encode_plain); excluded from equality/repr.
+           (core.heaan.encode_plain); excluded from equality/repr. May
+           be None when `pt_hash` names an operand the server already
+           holds in its (hash, level) plaintext cache.
     pt_logp: the plaintext's scale (mul_plain: 0 → params.log_delta;
            add_plain: must match the ciphertext's logp, 0 → assumed to).
+    pt_hash: content hash of the plaintext MESSAGE at its encoding scale
+           (core.encoding.message_hash). With `pt` set it registers the
+           operand in the server's plaintext cache; alone it references
+           a previously registered operand — affine-layer weights encode
+           and ship once, not per request.
     """
 
     op: str
@@ -85,6 +96,7 @@ class CircuitOp:
     pt: Optional[np.ndarray] = dataclasses.field(
         default=None, compare=False, repr=False)
     pt_logp: int = 0
+    pt_hash: Optional[str] = None
 
 
 def validate_circuit(ops: List[CircuitOp],
@@ -130,17 +142,20 @@ def validate_circuit(ops: List[CircuitOp],
         if node.op == "mul":
             logp = ms[0][1] + ms[1][1]
         elif node.op in PLAIN_OPS:
-            if node.pt is None:
+            if node.pt is None and node.pt_hash is None:
                 raise ValueError(
                     f"node {i}: {node.op} needs an encoded plaintext "
-                    f"operand (core.heaan.encode_plain)")
-            shape = np.asarray(node.pt).shape
-            if len(shape) != 2 or shape[0] != params.N \
-                    or shape[1] < params.qlimbs(logq):
-                raise ValueError(
-                    f"node {i}: {node.op} plaintext shape {shape} does "
-                    f"not cover ({params.N}, {params.qlimbs(logq)}) — "
-                    f"encode at the node's input level 2^{logq}")
+                    f"operand (core.heaan.encode_plain) or a pt_hash "
+                    f"referencing the server's plaintext cache")
+            if node.pt is not None:
+                shape = np.asarray(node.pt).shape
+                if len(shape) != 2 or shape[0] != params.N \
+                        or shape[1] < params.qlimbs(logq):
+                    raise ValueError(
+                        f"node {i}: {node.op} plaintext shape {shape} "
+                        f"does not cover ({params.N}, "
+                        f"{params.qlimbs(logq)}) — encode at the node's "
+                        f"input level 2^{logq}")
             if node.op == "mul_plain":
                 if node.pt_logp < 0:
                     raise ValueError(
@@ -216,3 +231,69 @@ def circuit_schedule(ops: List[CircuitOp],
         else:
             keys.append((node.op, in_logq, None))
     return meta, keys, nslots
+
+
+def execute_circuit_reference(ops: List[CircuitOp],
+                              inputs: Dict[str, "object"],
+                              params: HEParams, *, evk=None,
+                              rot_keys: Optional[Dict[int, object]] = None,
+                              conj_key=None):
+    """Run a circuit through the composed single-device `core` references.
+
+    This is the bitwise ORACLE the served path is tested against: every
+    node maps to exactly the core.heaan / core.rotate call the engine's
+    batched step reproduces (slot_sum as the doubling rotate+add ladder).
+    Plaintext nodes must carry a materialized `pt` (there is no cache on
+    this path — resolve hashes first). Returns the LAST node's
+    Ciphertext, like ``HEServer.submit_circuit``'s result.
+    """
+    from repro.core import heaan as H
+    from repro.core.rotate import he_conjugate, he_rotate
+    from repro.hserve.engine import slot_sum_rotations
+
+    validate_circuit(
+        ops, {n: (c.logq, c.logp) for n, c in inputs.items()}, params)
+    rot_keys = rot_keys or {}
+    values: Dict[NodeRef, object] = dict(inputs)
+    for i, node in enumerate(ops):
+        cts = [values[a] for a in node.args]
+        if node.op == "mul":
+            if evk is None:
+                raise ValueError(f"node {i}: mul needs an evaluation key")
+            out = H.he_mul(cts[0], cts[1], evk, params)
+        elif node.op == "add":
+            out = H.he_add(cts[0], cts[1])
+        elif node.op == "sub":
+            out = H.he_sub(cts[0], cts[1])
+        elif node.op == "rotate":
+            out = he_rotate(cts[0], node.r, rot_keys[node.r], params)
+        elif node.op == "conjugate":
+            if conj_key is None:
+                raise ValueError(
+                    f"node {i}: conjugate needs a conjugation key")
+            out = he_conjugate(cts[0], conj_key, params)
+        elif node.op == "slot_sum":
+            out = cts[0]
+            for r in slot_sum_rotations(out.n_slots):
+                out = H.he_add(out, he_rotate(out, r, rot_keys[r], params))
+        elif node.op == "rescale":
+            out = H.rescale(cts[0], params, dlogp=node.dlogp or None)
+        elif node.op == "mod_down":
+            out = H.he_mod_down(cts[0], params, node.logq2)
+        elif node.op == "mul_plain":
+            if node.pt is None:
+                raise ValueError(
+                    f"node {i}: reference execution needs a materialized "
+                    f"pt (no plaintext cache on this path)")
+            out = H.he_mul_plain(cts[0], node.pt, params,
+                                 pt_logp=node.pt_logp or None)
+        elif node.op == "add_plain":
+            if node.pt is None:
+                raise ValueError(
+                    f"node {i}: reference execution needs a materialized "
+                    f"pt (no plaintext cache on this path)")
+            out = H.he_add_plain(cts[0], node.pt, params)
+        else:                             # unreachable post-validation
+            raise ValueError(f"node {i}: unknown op {node.op!r}")
+        values[i] = out
+    return values[len(ops) - 1]

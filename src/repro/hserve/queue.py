@@ -180,7 +180,8 @@ class RequestQueue:
     def submit(self, op: str, cts: Tuple[Ciphertext, ...], r: int = 0,
                dlogp: int = 0, logq2: int = 0,
                pt: Optional[np.ndarray] = None, pt_logp: int = 0,
-               t_submit: Optional[float] = None) -> int:
+               t_submit: Optional[float] = None,
+               pt_owned: bool = False) -> int:
         """Enqueue a request; returns its request id.
 
         t_submit defaults to THIS QUEUE'S clock — never a module-level
@@ -226,8 +227,16 @@ class RequestQueue:
                     f"ciphertext's {tuple(ct_shape)} limbs")
             # copy, not a view: the queued request must not alias the
             # caller's (mutable) buffer — a client reusing its encode
-            # scratch before the bucket flushes would corrupt the batch
-            pt = np.array(pt[:, :ct_shape[-1]])
+            # scratch before the bucket flushes would corrupt the batch.
+            # Exception: pt_owned marks a server-owned read-only cache
+            # resident (HEServer sets it only for hash-resolved
+            # operands), which is safe to alias and hot enough to
+            # matter. Writeability alone is NOT trusted as an ownership
+            # signal — a caller's read-only view can have a writeable
+            # base (np.broadcast_to, setflags round-trips).
+            sliced = pt[:, :ct_shape[-1]]
+            pt = sliced if pt_owned and not sliced.flags.writeable \
+                else np.array(sliced)
             if op == "mul_plain" and pt_logp <= 0:
                 raise ValueError(
                     "mul_plain needs pt_logp, the plaintext's scale "
@@ -336,7 +345,8 @@ class BatchAssembler:
     """Stack + zero-pad a same-bucket request list to the fixed shape."""
 
     def __init__(self, batch: int):
-        assert batch >= 1
+        if batch < 1:                   # not assert: gone under python -O
+            raise ValueError(f"batch size must be >= 1, got {batch}")
         self.batch = batch
 
     def assemble(self, requests: List[Request]) -> Batch:

@@ -92,7 +92,8 @@ class CircuitScheduler:
     """
 
     def __init__(self, lookahead: int = 2):
-        assert lookahead >= 0
+        if lookahead < 0:               # not assert: gone under python -O
+            raise ValueError(f"lookahead must be >= 0, got {lookahead}")
         self.lookahead = lookahead
         self._circ: Dict[int, _SchedCircuit] = {}
         # pending (registered, not yet enqueued) nodes per bucket key

@@ -63,12 +63,15 @@ import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from repro.core.cipher import Ciphertext, EvalKey
 from repro.core.params import HEParams
 from repro.hserve.circuit import CircuitOp, circuit_schedule
 from repro.hserve.engine import Inflight, OpEngine, slot_sum_rotations
 from repro.hserve.metrics import ServeMetrics
-from repro.hserve.queue import Batch, BatchAssembler, RequestQueue
+from repro.hserve.queue import Batch, BatchAssembler, PLAIN_OPS, \
+    RequestQueue
 from repro.hserve.scheduler import CircuitScheduler
 from repro.hserve.tables import TableCache
 
@@ -86,6 +89,9 @@ class _CircuitState:
         self.ops = ops
         self.values: Dict[Union[int, str], Ciphertext] = dict(inputs)
         self.submitted: set = set()
+        # per-node plaintext operands resolved from the server's
+        # (hash, level) cache at submit_circuit time (nodes are frozen)
+        self.pts: Dict[int, object] = {}
 
 
 class HEServer:
@@ -113,6 +119,9 @@ class HEServer:
             benchmarks can A/B it on one warm server.
     lookahead: the scheduler's sibling horizon in engine batches.
     prefetch: table-slice prefetch on/off (only active under schedule).
+    plain_cache_mib: LRU budget for the (hash, level) plaintext-operand
+            cache (None = unbounded) — one-shot per-request operands
+            must not accumulate forever on a long-running server.
     clock:  time source for ages/latencies (injectable for deterministic
             tests; defaults to time.perf_counter). Threaded into the
             RequestQueue so direct queue submits share the timeline.
@@ -132,6 +141,7 @@ class HEServer:
                  schedule: bool = False,
                  lookahead: int = 2,
                  prefetch: bool = True,
+                 plain_cache_mib: Optional[float] = 256.0,
                  clock: Callable[[], float] = time.perf_counter,
                  **engine_knobs):
         if mesh is None:
@@ -146,7 +156,8 @@ class HEServer:
         self.schedule = schedule
         self.prefetch = prefetch
         self._clock = clock
-        self.cache = TableCache(params, evk, rot_keys, conj_key)
+        self.cache = TableCache(params, evk, rot_keys, conj_key,
+                                plain_cache_mib=plain_cache_mib)
         self.engine = OpEngine(params, mesh, self.cache,
                                use_kernels=use_kernels, **engine_knobs)
         self.queue = RequestQueue(clock=clock)
@@ -163,7 +174,9 @@ class HEServer:
     # ---- request intake --------------------------------------------------
 
     def submit(self, op: str, cts, r: int = 0, dlogp: int = 0,
-               logq2: int = 0, pt=None, pt_logp: int = 0) -> int:
+               logq2: int = 0, pt=None, pt_logp: int = 0,
+               pt_hash: Optional[str] = None,
+               pt_owned: bool = False) -> int:
         """Enqueue one request; returns its rid (used to match results).
 
         Key availability is checked HERE, not at execution: a request
@@ -171,9 +184,32 @@ class HEServer:
         fail mid-drain, after being popped, taking the batch's other
         requests down with it). rescale's dlogp defaults to params.logp;
         mul_plain's pt_logp to params.log_delta. The plaintext ops need
-        NO key material — that is their point. t_submit comes from the
-        queue's clock (the server's injected one).
+        NO key material — that is their point; with a pt_hash their
+        encoded operand is registered in (pt given) or resolved from
+        (pt None) the server's (hash, level) plaintext cache, so a
+        reused operand ships and encodes ONCE. pt_owned marks pt as a
+        server-owned resident buffer (a cache entry) the queue may
+        alias instead of defensively copying; hash-resolved operands
+        set it themselves. t_submit comes from the queue's clock (the
+        server's injected one).
         """
+        register = None
+        if op in PLAIN_OPS and pt_hash is not None:
+            first = cts[0] if isinstance(cts, (tuple, list)) else cts
+            if pt is None:
+                pt = self.cache.get_plain(pt_hash, first.logq)
+                pt_owned = True
+            else:
+                # registration happens AFTER queue validation below — a
+                # rejected operand must never poison the cache (a later
+                # hash-only circuit would resolve it and fail mid-drain).
+                # ONE owned read-only copy up front: the queue aliases
+                # it (pt_owned) and put_plain adopts it — not three
+                # copies of an (N, qlimbs) buffer for one registration.
+                pt = np.array(pt)
+                pt.setflags(write=False)
+                pt_owned = True
+                register = (pt_hash, first.logq)
         if op == "mul":
             self.cache.evk()                  # raises when absent
         elif op == "rotate":
@@ -193,8 +229,11 @@ class HEServer:
                                               # the queue's ValueError
         elif op == "mul_plain" and pt_logp == 0:
             pt_logp = self.params.log_delta
-        return self.queue.submit(op, cts, r=r, dlogp=dlogp, logq2=logq2,
-                                 pt=pt, pt_logp=pt_logp)
+        rid = self.queue.submit(op, cts, r=r, dlogp=dlogp, logq2=logq2,
+                                pt=pt, pt_logp=pt_logp, pt_owned=pt_owned)
+        if register is not None:
+            self.cache.put_plain(register[0], register[1], pt)
+        return rid
 
     def submit_mul(self, c1: Ciphertext, c2: Ciphertext) -> int:
         return self.submit("mul", (c1, c2))
@@ -221,18 +260,25 @@ class HEServer:
     def submit_mod_down(self, ct: Ciphertext, logq2: int) -> int:
         return self.submit("mod_down", (ct,), logq2=logq2)
 
-    def submit_mul_plain(self, ct: Ciphertext, pt,
-                         pt_logp: Optional[int] = None) -> int:
+    def submit_mul_plain(self, ct: Ciphertext, pt=None,
+                         pt_logp: Optional[int] = None,
+                         pt_hash: Optional[str] = None) -> int:
         """Ciphertext × encoded plaintext (region 1 only — no key
         switch). pt: (N, qlimbs) mod-q limbs at ct's level
-        (core.heaan.encode_plain); pt_logp defaults to params.log_delta."""
-        return self.submit("mul_plain", (ct,), pt=pt, pt_logp=pt_logp or 0)
+        (core.heaan.encode_plain); pt_logp defaults to params.log_delta.
+        pt_hash registers/references the server's plaintext cache —
+        pt=None resolves a previously registered operand by hash."""
+        return self.submit("mul_plain", (ct,), pt=pt, pt_logp=pt_logp or 0,
+                           pt_hash=pt_hash)
 
-    def submit_add_plain(self, ct: Ciphertext, pt,
-                         pt_logp: Optional[int] = None) -> int:
+    def submit_add_plain(self, ct: Ciphertext, pt=None,
+                         pt_logp: Optional[int] = None,
+                         pt_hash: Optional[str] = None) -> int:
         """Ciphertext + encoded plaintext (bx-only limb add; the
-        plaintext must be encoded at ct's scale)."""
-        return self.submit("add_plain", (ct,), pt=pt, pt_logp=pt_logp or 0)
+        plaintext must be encoded at ct's scale). pt_hash as in
+        :meth:`submit_mul_plain`."""
+        return self.submit("add_plain", (ct,), pt=pt, pt_logp=pt_logp or 0,
+                           pt_hash=pt_hash)
 
     # ---- circuits --------------------------------------------------------
 
@@ -275,8 +321,26 @@ class HEServer:
                         f"circuit slot_sum over {nslots[i]} slots needs "
                         f"rotation keys {missing}; loaded: "
                         f"{self.cache.rotation_amounts}")
+        # plaintext operands, resolved against the (hash, level) cache up
+        # front: a hash the server never saw must reject the WHOLE
+        # circuit here (never mid-drain); a provided pt with a hash is
+        # registered so later circuits reference it without re-shipping
+        pts: Dict[int, object] = {}
+        for i, node in enumerate(ops):
+            if node.op in PLAIN_OPS and node.pt_hash is not None:
+                in_logq = keys[i][1]
+                if node.pt is None:
+                    try:
+                        pts[i] = self.cache.get_plain(node.pt_hash, in_logq)
+                    except KeyError as e:
+                        raise ValueError(f"circuit node {i}: {e.args[0]}") \
+                            from None
+                else:
+                    pts[i] = self.cache.put_plain(node.pt_hash, in_logq,
+                                                  node.pt)
         cid = self.queue.reserve_rid()
         circ = _CircuitState(cid, ops, inputs)
+        circ.pts = pts
         self._circuits[cid] = circ
         self.scheduler.register(
             cid, keys, [tuple(a for a in node.args if isinstance(a, int))
@@ -295,8 +359,10 @@ class HEServer:
             except KeyError:
                 continue                      # operands not ready yet
             rid = self.submit(node.op, cts, r=node.r, dlogp=node.dlogp,
-                              logq2=node.logq2, pt=node.pt,
-                              pt_logp=node.pt_logp)
+                              logq2=node.logq2,
+                              pt=circ.pts.get(i, node.pt),
+                              pt_logp=node.pt_logp,
+                              pt_owned=i in circ.pts)
             circ.submitted.add(i)
             self._node_of_rid[rid] = (circ.cid, i)
             self.scheduler.on_enqueued(circ.cid, i)

@@ -39,7 +39,10 @@ and one resident copy serves every level and region.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 import jax.numpy as jnp
 
@@ -65,7 +68,8 @@ class TableCache:
 
     def __init__(self, params: HEParams, evk: Optional[EvalKey] = None,
                  rot_keys: Optional[Dict[int, EvalKey]] = None,
-                 conj_key: Optional[EvalKey] = None):
+                 conj_key: Optional[EvalKey] = None,
+                 plain_cache_mib: Optional[float] = 256.0):
         self.params = params
         g = build_global_tables(params)
         top = build_icrt_tables(params, params.max_np)
@@ -98,6 +102,19 @@ class TableCache:
             if conj_key is not None else None
         self.hits = 0
         self.misses = 0
+        # encoded plaintext operands keyed by (message hash, logq) — the
+        # ROADMAP "plaintext operand caching" follow-on: affine-layer
+        # weights encode once, every later request references the hash.
+        # LRU-bounded (plain_cache_mib; None = unbounded): a server fed
+        # per-request one-shot operands must not grow without limit.
+        self._plain: "OrderedDict[Tuple[str, int], np.ndarray]" = \
+            OrderedDict()
+        self._plain_cap = None if plain_cache_mib is None \
+            else int(plain_cache_mib * 2**20)
+        self._plain_bytes = 0
+        self.plain_hits = 0
+        self.plain_misses = 0
+        self.plain_evictions = 0
 
     # ---- per-level region tables ----------------------------------------
 
@@ -134,6 +151,60 @@ class TableCache:
             self._icrt_dev[npn] = {
                 k: jnp.asarray(getattr(tabs, k)) for k in _ICRT_KEYS}
         return self._icrt_dev[npn]
+
+    # ---- plaintext operands ----------------------------------------------
+
+    def put_plain(self, h: str, logq: int, pt) -> np.ndarray:
+        """Cache an encoded plaintext operand under (hash, logq); returns
+        the resident copy. An existing entry wins (and counts a hit —
+        the client re-sent an operand the server already held). The
+        resident array is marked read-only, so the request queue can
+        alias it instead of re-copying the (N, qlimbs) buffer on every
+        submit that resolves from the cache."""
+        key = (h, int(logq))
+        if key in self._plain:
+            self.plain_hits += 1
+            self._plain.move_to_end(key)
+        else:
+            self.plain_misses += 1
+            if isinstance(pt, np.ndarray) and not pt.flags.writeable \
+                    and pt.base is None:
+                arr = pt       # adopt an owned immutable buffer as-is
+            else:              # (base check: a read-only VIEW can have
+                arr = np.array(pt)            # a writeable base)
+                arr.setflags(write=False)
+            self._plain[key] = arr
+            self._plain_bytes += arr.nbytes
+            # LRU eviction (never the entry just inserted). In-flight
+            # circuits resolved their arrays at submit and keep their
+            # own references, so eviction cannot break queued work —
+            # only a LATER hash-only reference to an evicted key fails
+            # (and re-registering it is always legal).
+            while self._plain_cap is not None and len(self._plain) > 1 \
+                    and self._plain_bytes > self._plain_cap:
+                _, old = self._plain.popitem(last=False)
+                self._plain_bytes -= old.nbytes
+                self.plain_evictions += 1
+        return self._plain[key]
+
+    def get_plain(self, h: str, logq: int) -> np.ndarray:
+        """The cached encoded operand for (hash, logq); KeyError (before
+        anything is enqueued) when the client references a hash the
+        server never saw at this level."""
+        key = (h, int(logq))
+        if key not in self._plain:
+            raise KeyError(
+                f"no cached plaintext for hash {h!r} at logq={logq}; "
+                f"send the encoded operand once (pt=..., pt_hash=...) "
+                f"before referencing it by hash alone")
+        self.plain_hits += 1
+        self._plain.move_to_end(key)
+        return self._plain[key]
+
+    def has_plain(self, h: str, logq: int) -> bool:
+        """Whether (hash, logq) is cached — `repro.client`'s compile pass
+        asks this to skip the client-side encode entirely on reuse."""
+        return (h, int(logq)) in self._plain
 
     # ---- keys ------------------------------------------------------------
 
@@ -182,6 +253,7 @@ class TableCache:
                     for d in ([self._ek] if self._ek else [])
                     + ([self._conj] if self._conj else [])
                     + list(self._rot.values()) for v in d.values())
+        plain_b = self._plain_bytes
         return {
             "levels_materialized": sorted(self._levels),
             "np_sets": sorted(self._icrt_dev),
@@ -189,7 +261,12 @@ class TableCache:
             "conj_key": self.has_conj_key,
             "hits": self.hits,
             "misses": self.misses,
+            "plain_entries": len(self._plain),
+            "plain_hits": self.plain_hits,
+            "plain_misses": self.plain_misses,
+            "plain_evictions": self.plain_evictions,
             "resident_mib": round(res_b / 2**20, 3),
             "icrt_mib": round(icrt_b / 2**20, 3),
             "keys_mib": round(key_b / 2**20, 3),
+            "plain_mib": round(plain_b / 2**20, 3),
         }

@@ -50,55 +50,64 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
              plain_frac: float = 0.0, model_shards: int = 1,
              use_kernels: bool = False, max_age_s: float | None = None,
              overlap: bool = False, circuit: bool = False,
-             schedule: bool = False, seed: int = 0) -> dict:
-    """Batched multi-level HE serving over the repro.hserve runtime.
+             schedule: bool = False, traced: int = 0,
+             seed: int = 0) -> dict:
+    """Batched multi-level HE serving, driven through a `repro.client`
+    HESession (the session owns keygen, encrypt/decrypt, and the
+    HEServer; the raw per-op stream rides `session.server`).
 
-    Builds an HEServer (resident tables + jit-once engine on the host
-    mesh), submits a mixed stream of HE-Mul / rotate / conjugate
-    requests spread over `levels` moduli — `plain_frac` of the mul share
-    served as the key-switch-free mul_plain/add_plain plaintext-operand
-    ops — plus, with `circuit`, a whole degree-4 encrypted polynomial
-    circuit via submit_circuit (TWO staggered copies under `schedule`,
+    Submits a mixed stream of HE-Mul / rotate / conjugate requests
+    spread over `levels` moduli — `plain_frac` of the mul share served
+    as the key-switch-free mul_plain/add_plain plaintext-operand ops —
+    plus, with `circuit`, a whole degree-4 encrypted polynomial circuit
+    via submit_circuit (TWO staggered copies under `schedule`,
     exercising the circuit-aware scheduler's cross-circuit co-batching
-    and table prefetch) — drains the queue with padded batching, and
-    verifies every decrypted result. Returns the server stats dict plus
-    a max_err field (printed by main).
+    and table prefetch), plus, with `traced` > 0, that many TRACED
+    client expressions (every handle op, no explicit level management —
+    the compile pass inserts it) sharing one weight vector so every
+    expression after the first ships hash-only plaintext operands and
+    hits the server's (hash, level) cache. Drains the queue with padded
+    batching and verifies every decrypted result. Returns the server
+    stats dict plus a max_err field (printed by main).
     """
+    from repro.client import HESession
     from repro.configs.heaan_mul import SMOKE
     from repro.core import heaan as H
-    from repro.core.keys import keygen
-    from repro.core.rotate import conj_keygen, rot_keygen
-    from repro.hserve import HEServer, degree4_demo_circuit
+    from repro.hserve import degree4_demo_circuit
     from repro.launch.mesh import make_host_mesh
 
     params = SMOKE
     requests = requests or 2 * batch + 1   # force >1 batch and padding
     # the lowest level logq = logp is excluded: mul results there cannot
     # rescale (ciphertext exhausted), and verification rescales every mul
-    assert 1 <= levels <= params.L - 1, \
-        f"--levels must be in [1, {params.L - 1}]"
-    assert 0.0 <= plain_frac <= 1.0, "--plain-frac must be in [0, 1]"
-    sk, pk, evk = keygen(params, seed=0)
-    rot_keys = {1: rot_keygen(params, sk, 1)} if rotations else {}
-    conj_key = conj_keygen(params, sk) if conjugations or circuit else None
-    server = HEServer(params, evk, rot_keys, conj_key,
-                      mesh=make_host_mesh(model=model_shards),
-                      batch=batch, use_kernels=use_kernels,
-                      max_age_s=max_age_s, overlap=overlap,
-                      schedule=schedule)
+    if not 1 <= levels <= params.L - 1:
+        raise ValueError(f"--levels must be in [1, {params.L - 1}]")
+    if not 0.0 <= plain_frac <= 1.0:
+        raise ValueError("--plain-frac must be in [0, 1]")
+    session = HESession(params, seed=0,
+                        mesh=make_host_mesh(model=model_shards),
+                        batch=batch, use_kernels=use_kernels,
+                        max_age_s=max_age_s, overlap=overlap,
+                        schedule=schedule)
+    server = session.server
+    if rotations:
+        session.ensure_rotation_keys([1])
+    if conjugations or circuit:
+        session.ensure_conj_key()
 
     rng = np.random.default_rng(seed)
     n = params.n_slots_max
     logqs = [params.logQ - i * params.logp for i in range(levels)]
     expect = {}   # rid -> (op, expected slots)
     n_mul = requests - rotations - conjugations
-    assert n_mul >= 0, \
-        "--rotations + --conjugations cannot exceed --requests"
+    if n_mul < 0:
+        raise ValueError(
+            "--rotations + --conjugations cannot exceed --requests")
     n_plain = int(round(plain_frac * n_mul))
     for i in range(requests):
         logq = logqs[i % levels]
         z = rng.normal(size=n) + 1j * rng.normal(size=n)
-        ct = H.encrypt_message(z, pk, params, seed=2 * i + 1)
+        ct = session.encrypt(z, seed=2 * i + 1).ciphertext
         if logq < params.logQ:
             ct = H.he_mod_down(ct, params, logq)
         if i < n_plain:
@@ -114,7 +123,7 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
                     ("add_plain", z + w)
         elif i < n_mul:
             z2 = rng.normal(size=n) + 1j * rng.normal(size=n)
-            c2 = H.encrypt_message(z2, pk, params, seed=2 * i + 2)
+            c2 = session.encrypt(z2, seed=2 * i + 2).ciphertext
             if logq < params.logQ:
                 c2 = H.he_mod_down(c2, params, logq)
             expect[server.submit_mul(ct, c2)] = ("mul", z * z2)
@@ -134,7 +143,7 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
         results = {}
         for j in range(n_circ):
             zc = rng.normal(size=n) + 1j * rng.normal(size=n)
-            x = H.encrypt_message(zc, pk, params, seed=7777 + j)
+            x = session.encrypt(zc, seed=7777 + j).ciphertext
             cid = server.submit_circuit(ops, inputs={"x": x})
             expect[cid] = ("circuit", np.conj(zc ** 4) + zc)
             if schedule and j == 0:       # desync the two circuits (the
@@ -143,14 +152,35 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     else:
         results = {}
 
-    results.update(server.drain())
+    tfuts = []
+    if traced:
+        # the session API end to end: every traced op, NO explicit
+        # rescale/mod_down (the compile pass inserts level management),
+        # one shared weight vector — every expression after the first
+        # compiles to hash-only plain operands (server-cache hits)
+        wz = 0.5 * (rng.normal(size=n) + 1j * rng.normal(size=n))
+        for j in range(traced):
+            zt = 0.5 * (rng.normal(size=n) + 1j * rng.normal(size=n))
+            x = session.encrypt(zt, seed=5555 + j)
+            tfuts.append(
+                (session.run([((x * x) * wz + x)
+                              .rotate(1).conj().slot_sum()])[0],
+                 np.full(n, np.conj(np.roll(zt * zt * wz + zt,
+                                            -1)).sum())))
+
+    # session.drain (not server.drain) so traced futures resolve while
+    # the raw per-op/circuit results come back as {rid: ct}
+    results.update(session.drain())
     errs = []
     for rid, (op, want) in expect.items():
         out = results[rid]
         if op in ("mul", "mul_plain"):
             out = H.rescale(out, params)
-        got = H.decrypt_message(out, sk, params)
+        got = session.decrypt(out)
         errs.append(float(np.abs(got - want).max()))
+    for fut, want in tfuts:
+        errs.append(float(np.abs(session.decrypt(fut.result())
+                                 - want).max()))
     stats = server.stats()
     stats["devices"] = len(jax.devices())
     stats["max_err"] = max(errs)
@@ -196,6 +226,12 @@ def main():
                          "(op, level) nodes across circuits via "
                          "lookahead deferral and prefetch next-level "
                          "table slices behind the in-flight batch")
+    ap.add_argument("--traced", type=int, default=0,
+                    help="also run this many TRACED repro.client "
+                         "expressions (every handle op, auto level "
+                         "management) through the session; they share "
+                         "one weight vector, so runs after the first "
+                         "hit the server's plaintext-operand cache")
     ap.add_argument("--max-age-s", type=float, default=None,
                     help="continuous-batching SLO: flush a bucket once "
                          "its oldest request has waited this long "
@@ -218,7 +254,8 @@ def main():
                          model_shards=args.model_shards,
                          use_kernels=args.kernels,
                          max_age_s=args.max_age_s, overlap=args.overlap,
-                         circuit=args.circuit, schedule=args.schedule)
+                         circuit=args.circuit, schedule=args.schedule,
+                         traced=args.traced)
         ops = ", ".join(
             f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
             f"(p50 {d['latency_ms']['p50']}ms, "
@@ -235,6 +272,11 @@ def main():
                   f"deferrals={sch['deferrals']} "
                   f"prefetched_levels={sch['prefetched_levels']} "
                   f"cross_circuit_rate={cb['cross_circuit_rate']}")
+        if args.traced:
+            c = stats["cache"]
+            print(f"  plaintext cache: {c['plain_hits']} hits / "
+                  f"{c['plain_misses']} misses "
+                  f"({c['plain_entries']} entries)")
         print(f"  max_err {stats['max_err']:.2e}")
         assert stats["max_err"] < 1e-2, "HE serving pipeline diverged"
         return

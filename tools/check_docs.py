@@ -52,6 +52,7 @@ BENCH_SCHEMA = {
     "overlap": dict,
     "plain": dict,
     "scheduler": dict,
+    "client": dict,
 }
 PARAMS_KEYS = ("logN", "logQ", "logp", "beta_bits")
 TRICKLE_SCHEMA = {"requests": int, "max_age_s": NUM, "p50_ms": NUM,
@@ -68,6 +69,12 @@ SCHED_PHASE_SCHEMA = {"drain_s": NUM, "batches": int, "mul_pad_frac": NUM,
                       "cross_circuit_batches": int,
                       "cross_circuit_rate": NUM, "deferrals": int,
                       "prefetches": int}
+# the repro.client traced-session vs hand-built-circuit A/B
+CLIENT_SCHEMA = {"circuits": int, "hand_drain_s": NUM,
+                 "traced_drain_s": NUM, "hand_mul_pad_frac": NUM,
+                 "traced_mul_pad_frac": NUM, "cross_circuit_rate": NUM,
+                 "plain_cache_hits": int, "plain_cache_hit_rate": NUM,
+                 "bitwise_identical": bool}
 
 
 def check_links(repo: Path) -> list:
@@ -136,6 +143,16 @@ def check_bench(bench: Path) -> list:
         if sch.get("bitwise_identical") is False:
             errors.append(f"{bench.name}.scheduler: scheduling changed "
                           "a result bit (bitwise_identical false)")
+    if isinstance(obj.get("client"), dict):
+        cl = obj["client"]
+        errors += _check_block(cl, CLIENT_SCHEMA, f"{bench.name}.client")
+        if cl.get("bitwise_identical") is False:
+            errors.append(f"{bench.name}.client: the traced frontend "
+                          "changed a result bit (bitwise_identical "
+                          "false)")
+        if cl.get("plain_cache_hits") == 0:
+            errors.append(f"{bench.name}.client: traced circuits never "
+                          "hit the plaintext-operand cache")
     return errors
 
 
