@@ -12,7 +12,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_params, row, timeit
-from repro.core import rns
 from repro.core.context import make_context
 from repro.core.crt import crt, icrt
 from repro.core.ntt import intt, ntt

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import json
 import sys
-from typing import Dict, Optional
+from typing import Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -25,7 +25,14 @@ additions, schema documented in docs/SERVING.md):
     HESession.run (w encodes once; later circuits ship hash-only and
     hit the server's (hash, level) plaintext cache): drain walls,
     mul pad fraction, cross-circuit co-batch rate, cache hit rate, and
-    a bitwise-identical guard (the frontend must never change a bit).
+    a bitwise-identical guard (the frontend must never change a bit);
+  - "analysis": the repro.analysis cost-model A/B — the scheduler's
+    deferral gate consulting a CostModel calibrated from THIS record's
+    own throughputs vs deferring unconditionally, on the same staggered
+    degree-4 pair: drain walls, batch counts, mul padding, deferral /
+    cost-skip counts, the model's estimated device-seconds per circuit,
+    and a bitwise-identical guard (cost-gated scheduling must never
+    change a result bit).
 
     PYTHONPATH=src python benchmarks/serve_he.py                # quick
     PYTHONPATH=src python benchmarks/serve_he.py --full         # Table III
@@ -241,6 +248,58 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
         for c, f in zip(hand_cids, tfuts))
     assert client_bitwise, "the traced frontend changed a result bit"
 
+    # ---- analysis: cost-model-gated scheduler A/B -----------------------
+    # calibrate repro.analysis.CostModel from the throughputs measured
+    # ABOVE (the record being emitted is its own calibration source),
+    # then drain the same staggered degree-4 pair with the scheduler's
+    # deferral gate consulting the model vs not. At serving params a
+    # full-depth mul bucket clears defer_min_s (defer: co-batching
+    # pays) while add/rescale buckets cost ~µs (cost_skips: flush now)
+    from repro.analysis import CostModel
+
+    cm = CostModel.from_bench({
+        "params": {"logN": params.logN, "logQ": params.logQ,
+                   "logp": params.logp, "beta_bits": params.beta_bits},
+        "levels": logqs,
+        "mul_per_s": per_op.get("mul", {}).get("ops_per_s", 0.0),
+        "rotate_per_s": per_op.get("rotate", {}).get("ops_per_s", 0.0),
+        "plain": {"mul_plain_per_s": pl["mul_plain"]["ops_per_s"],
+                  "add_plain_per_s": pl["add_plain"]["ops_per_s"]},
+    }, params=params)
+    est_s, _ = cm.estimate_circuit(ops4, {"x": (params.logQ, params.logp)})
+
+    def costed_circuits(cost_model):
+        server.schedule = True
+        server.scheduler.cost_model = cost_model
+        server.reset_metrics()
+        d0 = server.scheduler.deferrals
+        k0 = server.scheduler.cost_skips
+        res = {}
+        c1 = server.submit_circuit(ops4, {"x": top[0]})
+        res.update(dict(server.poll(flush=True)))   # desync the pair
+        c2 = server.submit_circuit(ops4, {"x": top[1 % len(top)]})
+        t0 = time.perf_counter()
+        res.update(server.drain())
+        wall = time.perf_counter() - t0
+        s = server.stats()
+        return {
+            "drain_s": round(wall, 4),
+            "batches": sum(d["batches"] for d in s["per_op"].values()),
+            "mul_pad_frac": s["per_op"]["mul"]["pad_frac"],
+            "deferrals": server.scheduler.deferrals - d0,
+            "cost_skips": server.scheduler.cost_skips - k0,
+        }, (res[c1], res[c2])
+
+    nocost, outs_n = costed_circuits(None)
+    withcost, outs_c = costed_circuits(cm)
+    server.schedule = False
+    server.scheduler.cost_model = None
+    an_bitwise = all(
+        bool((np.asarray(a.ax) == np.asarray(b.ax)).all()
+             and (np.asarray(a.bx) == np.asarray(b.bx)).all())
+        for a, b in zip(outs_n, outs_c))
+    assert an_bitwise, "cost-model scheduling changed a result bit"
+
     # ---- trickle: arrival rate < batch; only the age policy flushes.
     # adaptive_target is disabled here on purpose: with it on, a trickle
     # is released the moment the target shrinks to the arrival rate and
@@ -322,6 +381,14 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
             "plain_cache_hit_rate":
                 round(hits / total, 3) if total else 0.0,
             "bitwise_identical": client_bitwise,
+        },
+        "analysis": {
+            "circuits": 2,
+            "calibrated_from": "self",
+            "est_circuit_s": round(est_s, 6),
+            "nocost": nocost,
+            "cost": withcost,
+            "bitwise_identical": an_bitwise,
         },
     }
 

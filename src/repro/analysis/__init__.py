@@ -1,0 +1,44 @@
+"""`repro.analysis` — static analysis over encrypted circuits (hslint).
+
+The paper's core contribution is a *disciplined static analysis* of HE
+Mul — op counts, modulus/level budgets, and data-access characteristics
+(§II–IV). This package is that discipline applied to whole circuits,
+BEFORE anything is enqueued:
+
+  - :mod:`repro.analysis.dataflow` — the single shared (logq, logp)
+    dataflow framework: forward abstract interpretation over
+    `CircuitOp` DAGs. Both `hserve.circuit.validate_circuit` and the
+    `repro.client` compile pass delegate to it (one set of transfer
+    functions, no drift), and every violation raises a
+    :class:`CircuitError` citing the offending node.
+  - :mod:`repro.analysis.noise` — a CKKS noise-budget estimator:
+    per-op worst-case (high-probability) noise growth in the canonical
+    embedding, following the paper's §II modulus-chain accounting.
+  - :mod:`repro.analysis.rules` — the lint rule registry (stable IDs
+    HS001–HS006 with severities).
+  - :mod:`repro.analysis.cost` — a bench-calibrated cost model
+    (device-seconds per (op, level), constants fitted from
+    BENCH_serve_he.json) consulted by the circuit-aware scheduler.
+  - :mod:`repro.analysis.analyzer` — ties it together into an
+    :class:`AnalysisReport`; `python -m repro.analysis` /
+    `tools/hslint.py` is the CLI over the example circuits.
+
+See docs/ANALYSIS.md for the rule catalog, the noise model's
+upper-bound contract, and the cost-model calibration.
+"""
+
+from repro.analysis.analyzer import (AnalysisReport, analyze_circuit,
+                                     analyze_handle)
+from repro.analysis.cost import CostModel, op_units
+from repro.analysis.dataflow import (OPS, PLAIN_OPS, CircuitError,
+                                     propagate, transfer)
+from repro.analysis.noise import NodeNoise, estimate_noise
+from repro.analysis.rules import RULES, Diagnostic, Rule
+
+__all__ = [
+    "AnalysisReport", "analyze_circuit", "analyze_handle",
+    "CostModel", "op_units",
+    "OPS", "PLAIN_OPS", "CircuitError", "propagate", "transfer",
+    "NodeNoise", "estimate_noise",
+    "RULES", "Diagnostic", "Rule",
+]

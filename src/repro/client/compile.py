@@ -44,6 +44,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.dataflow import transfer
 from repro.client.handles import CipherHandle
 from repro.core import heaan as H
 from repro.core.cipher import Ciphertext
@@ -69,6 +70,12 @@ class CompiledCircuit:
     the server's cache. ``HESession.run`` feeds these into the lookup
     of later compiles in the same call, so sibling circuits ship
     hash-only even though nothing has been submitted yet.
+
+    pt_bounds: per plain-op node index, the max |slot value| of that
+    node's plaintext operand — recorded at lowering (where the message
+    is still in hand, including for hash-only nodes whose encoding was
+    skipped) so `repro.analysis.noise` can bound plaintext products
+    without re-materializing operands.
     """
 
     ops: List[CircuitOp]
@@ -79,6 +86,7 @@ class CompiledCircuit:
     requires: Set[Requirement]
     plain_registers: Set[Tuple[str, int]] = \
         dataclasses.field(default_factory=set)
+    pt_bounds: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 def _ref_key(ref: NodeRef):
@@ -101,9 +109,18 @@ class _Lowering:
         self.cse: Dict[tuple, int] = {}
         self.requires: Set[Requirement] = set()
         self.plain_registers: Set[Tuple[str, int]] = set()
+        self.pt_bounds: Dict[int, float] = {}
 
     def m(self, ref: NodeRef) -> Tuple[int, int]:
         return self.in_meta[ref] if isinstance(ref, str) else self.meta[ref]
+
+    def out(self, op: str, refs, **kw) -> Tuple[int, int]:
+        """Output (logq, logp) for a node — THE shared transfer function
+        (`repro.analysis.dataflow.transfer`), the same rules
+        `validate_circuit` applies at admission, so a circuit this pass
+        emits can never be rejected by the server for level/scale
+        errors. Raises trace-cited CircuitError (a ValueError)."""
+        return transfer(op, [self.m(r) for r in refs], self.params, **kw)
 
     def emit(self, op: str, args: Tuple[NodeRef, ...], *, r: int = 0,
              dlogp: int = 0, logq2: int = 0, pt=None, pt_logp: int = 0,
@@ -121,22 +138,16 @@ class _Lowering:
     # ---- level management (the compiler-owned part) ---------------------
 
     def mod_down(self, ref: NodeRef, logq2: int) -> NodeRef:
-        lq, lp = self.m(ref)
-        if lq == logq2:
+        if self.m(ref)[0] == logq2:
             return ref
-        return self.emit("mod_down", (ref,), logq2=logq2, out=(logq2, lp))
+        return self.emit("mod_down", (ref,), logq2=logq2,
+                         out=self.out("mod_down", (ref,), logq2=logq2))
 
     def rescale(self, ref: NodeRef, dlogp: int) -> NodeRef:
         if dlogp == 0:
             return ref
-        lq, lp = self.m(ref)
-        if lq - dlogp <= 0:
-            raise ValueError(
-                f"traced expression exhausts the modulus: rescaling by "
-                f"{dlogp} at logq={lq} (the trace is deeper than "
-                f"L={self.params.L} supports; needs bootstrapping)")
         return self.emit("rescale", (ref,), dlogp=dlogp,
-                         out=(lq - dlogp, lp - dlogp))
+                         out=self.out("rescale", (ref,), dlogp=dlogp))
 
     def align_levels(self, a: NodeRef, b: NodeRef):
         la, lb = self.m(a)[0], self.m(b)[0]
@@ -157,7 +168,8 @@ class _Lowering:
     # ---- plaintext operands ---------------------------------------------
 
     def plain_operand(self, h: CipherHandle, log_delta: int, logq: int):
-        """(pt, hash) for a plain operand at a use site: hash always;
+        """(pt, hash, bound) for a plain operand at a use site: hash
+        (and the max-|slot| bound the noise estimator reads) always;
         the encode is SKIPPED when the server already caches
         (hash, logq) — or when an earlier node of THIS circuit already
         carries it (the lower-index node registers the operand at
@@ -165,12 +177,13 @@ class _Lowering:
         vector applied to k ciphertexts in one trace encodes once."""
         z = h.plain.broadcast(h.n_slots)
         hsh = message_hash(z, log_delta)
+        bound = float(np.max(np.abs(z))) if np.size(z) else 0.0
         if (hsh, logq) in self.plain_registers or (
                 self.lookup is not None and self.lookup(hsh, logq)):
-            return None, hsh
+            return None, hsh, bound
         self.plain_registers.add((hsh, logq))
         return np.asarray(H.encode_plain(z, self.params, logq,
-                                         log_delta=log_delta)), hsh
+                                         log_delta=log_delta)), hsh, bound
 
     # ---- the lowering walk ----------------------------------------------
 
@@ -188,40 +201,46 @@ class _Lowering:
         if h.op == "mul":
             a, b = self.align_levels(*refs)
             a, b = sorted((a, b), key=_ref_key)
-            lq = self.m(a)[0]
-            i = self.emit("mul", (a, b),
-                          out=(lq, self.m(a)[1] + self.m(b)[1]))
+            i = self.emit("mul", (a, b), out=self.out("mul", (a, b)))
             i = self.rescale(i, p.logp)
             self.requires.add(("evk",))
         elif h.op == "mul_plain":
             a, = refs
-            lq, lp = self.m(a)
-            pt, hsh = self.plain_operand(h, p.log_delta, lq)
+            lq = self.m(a)[0]
+            pt, hsh, bound = self.plain_operand(h, p.log_delta, lq)
             i = self.emit("mul_plain", (a,), pt=pt, pt_logp=p.log_delta,
-                          pt_hash=hsh, out=(lq, lp + p.log_delta))
+                          pt_hash=hsh,
+                          out=self.out("mul_plain", (a,),
+                                       pt_logp=p.log_delta))
+            self.pt_bounds[i] = bound
             i = self.rescale(i, p.logp)
         elif h.op in ("add", "sub"):
             a, b = self.align_scales_and_levels(*refs)
             if h.op == "add":
                 a, b = sorted((a, b), key=_ref_key)
-            i = self.emit(h.op, (a, b), out=self.m(a))
+            i = self.emit(h.op, (a, b), out=self.out(h.op, (a, b)))
         elif h.op == "add_plain":
             a, = refs
             lq, lp = self.m(a)
-            pt, hsh = self.plain_operand(h, lp, lq)
+            pt, hsh, bound = self.plain_operand(h, lp, lq)
             i = self.emit("add_plain", (a,), pt=pt, pt_logp=lp,
-                          pt_hash=hsh, out=(lq, lp))
+                          pt_hash=hsh,
+                          out=self.out("add_plain", (a,), pt_logp=lp))
+            self.pt_bounds[i] = bound
         elif h.op == "rotate":
             a, = refs
-            i = self.emit("rotate", (a,), r=h.r, out=self.m(a))
+            i = self.emit("rotate", (a,), r=h.r,
+                          out=self.out("rotate", (a,), r=h.r))
             self.requires.add(("rot", h.r))
         elif h.op == "conjugate":
             a, = refs
-            i = self.emit("conjugate", (a,), out=self.m(a))
+            i = self.emit("conjugate", (a,),
+                          out=self.out("conjugate", (a,)))
             self.requires.add(("conj",))
         else:                          # slot_sum (TRACE_OPS is closed)
             a, = refs
-            i = self.emit("slot_sum", (a,), out=self.m(a))
+            i = self.emit("slot_sum", (a,),
+                          out=self.out("slot_sum", (a,)))
             self.requires.update(
                 ("rot", r) for r in slot_sum_rotations(h.n_slots))
         self.memo[h] = i
@@ -257,4 +276,5 @@ def compile_handle(root: CipherHandle, params: HEParams, *,
     return CompiledCircuit(ops=lw.ops, inputs=lw.inputs,
                            out_logq=out_logq, out_logp=out_logp,
                            n_slots=root.n_slots, requires=lw.requires,
-                           plain_registers=lw.plain_registers)
+                           plain_registers=lw.plain_registers,
+                           pt_bounds=lw.pt_bounds)

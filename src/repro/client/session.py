@@ -118,6 +118,9 @@ class HESession:
         # raw server-submit results completed by a future-triggered
         # drain, buffered until the next explicit drain() claims them
         self._raw: Dict[int, Ciphertext] = {}
+        # AnalysisReports from the latest run(check=...), one per
+        # handle (None for bare inputs)
+        self.last_reports: list = []
         # per-session counter for default encryption seeds: every
         # default-seeded encrypt gets FRESH randomness (reusing one seed
         # across messages leaks their difference — c1.bx − c2.bx would
@@ -170,7 +173,8 @@ class HESession:
         return compile_handle(handle, self.params,
                               plain_lookup=self.server.cache.has_plain)
 
-    def run(self, handles: Sequence[CipherHandle]) -> List[CipherFuture]:
+    def run(self, handles: Sequence[CipherHandle], *,
+            check: str = "off") -> List[CipherFuture]:
         """Compile + submit traced expressions; returns one future per
         handle. Nothing executes until a future's result() drains the
         server — so everything submitted here (and any raw server
@@ -187,7 +191,19 @@ class HESession:
         the already-enqueued circuits' results come back as raw
         {cid: ct} entries from the next :meth:`drain` instead of
         vanishing into unreachable futures.
+
+        check: run the static analyzer (`repro.analysis`) over every
+        compiled circuit BEFORE submitting anything. "error" raises
+        ValueError on any error- or warning-severity finding (noise
+        below the waterline, dead nodes, rotation smells); "warn"
+        issues a `UserWarning` per finding instead; "off" (default)
+        skips analysis entirely. The reports of the latest checked run
+        are kept on ``self.last_reports`` (one per handle, None for
+        bare inputs) either way.
         """
+        if check not in ("off", "warn", "error"):
+            raise ValueError(f"check must be 'off', 'warn', or "
+                             f"'error', got {check!r}")
         pending: set = set()           # (hash, logq) earlier handles
                                        # in THIS call will register
         cache = self.server.cache
@@ -207,6 +223,8 @@ class HESession:
                 or (hs, lq) in pending)
             pending |= cc.plain_registers
             compiled.append((h, cc))
+        if check != "off":
+            self._check_compiled(compiled, check)
         futures: List[CipherFuture] = []
         to_register: List[CipherFuture] = []
         for h, cc in compiled:
@@ -229,6 +247,40 @@ class HESession:
             futures.append(to_register[-1])
         self._futures.update((f.cid, f) for f in to_register)
         return futures
+
+    def _check_compiled(self, compiled, check: str) -> None:
+        """The ``run(check=...)`` analysis pass: analyze every lowered
+        circuit (bare inputs skip), escalate per policy. Rotation keys
+        resident on the server count as provisioned for the HS004
+        rotation rule; an auto-keys session with a secret key reports
+        None (it can mint any key, so nothing is 'missing')."""
+        import warnings
+
+        from repro.analysis import analyze_handle
+
+        provisioned = None if (self.auto_keys and self.sk is not None) \
+            else set(self.server.cache.rotation_amounts())
+        self.last_reports = []
+        findings = []
+        for h, cc in compiled:
+            if cc is None:
+                self.last_reports.append(None)
+                continue
+            report = analyze_handle(h, self.params, compiled=cc,
+                                    provisioned_rotations=provisioned)
+            self.last_reports.append(report)
+            k = len(self.last_reports) - 1
+            findings += [(k, d) for d in report.diagnostics
+                         if d.severity in ("error", "warning")]
+        if not findings:
+            return
+        msgs = [f"handle {k}: {d.format()}" for k, d in findings]
+        if check == "error":
+            raise ValueError(
+                "static analysis rejected the run (check='error'): "
+                + "; ".join(msgs))
+        for m in msgs:
+            warnings.warn(m, stacklevel=3)
 
     def _drain_server(self) -> None:
         """Drain the server, routing results: future-owned cids resolve

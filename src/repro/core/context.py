@@ -22,7 +22,6 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import lru_cache
-from typing import Tuple
 
 import numpy as np
 

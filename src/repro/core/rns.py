@@ -11,13 +11,11 @@ kernels provide drop-in replacements for each stage (repro.kernels).
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bigint
-from repro.core.context import GlobalTables, IcrtTables, build_icrt_tables
+from repro.core.context import GlobalTables, build_icrt_tables
 from repro.core.crt import crt, icrt
 from repro.core.ntt import intt, ntt, pointwise_shoup_scale
 from repro.core.params import HEParams

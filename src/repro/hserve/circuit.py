@@ -28,8 +28,8 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.dataflow import propagate
 from repro.core.params import HEParams
-from repro.hserve.queue import OPS, PLAIN_OPS
 
 __all__ = ["CircuitOp", "validate_circuit", "circuit_schedule",
            "degree4_demo_circuit", "execute_circuit_reference"]
@@ -107,94 +107,15 @@ def validate_circuit(ops: List[CircuitOp],
     schedule the server will serve.
 
     input_meta maps input names to their ciphertexts' (logq, logp).
+
+    Delegates to the shared dataflow engine
+    (:func:`repro.analysis.dataflow.propagate`) — the same transfer
+    functions the client compile pass and the noise estimator use, so
+    admission and compilation can never disagree. Errors are
+    `repro.analysis.dataflow.CircuitError` (a `ValueError`) citing the
+    node index, op, and computed (logq, logp).
     """
-    if not ops:
-        raise ValueError("empty circuit")
-    meta: List[Tuple[int, int]] = []
-    for i, node in enumerate(ops):
-        if node.op not in OPS:
-            raise ValueError(
-                f"node {i}: unknown op {node.op!r}; serve one of {set(OPS)}")
-        if len(node.args) != OPS[node.op]:
-            raise ValueError(
-                f"node {i}: op {node.op!r} takes {OPS[node.op]} operand(s),"
-                f" got {len(node.args)}")
-
-        def resolve(a: NodeRef) -> Tuple[int, int]:
-            if isinstance(a, str):
-                if a not in input_meta:
-                    raise ValueError(
-                        f"node {i}: unknown input {a!r}; inputs: "
-                        f"{sorted(input_meta)}")
-                return input_meta[a]
-            if not 0 <= a < i:
-                raise ValueError(
-                    f"node {i}: arg {a} is not an earlier node "
-                    f"(circuits are topologically ordered lists)")
-            return meta[a]
-
-        ms = [resolve(a) for a in node.args]
-        logq, logp = ms[0]
-        if any(m[0] != logq for m in ms):
-            raise ValueError(
-                f"node {i}: operand levels differ "
-                f"({[m[0] for m in ms]}); mod_down first (paper §III-B)")
-        if node.op == "mul":
-            logp = ms[0][1] + ms[1][1]
-        elif node.op in PLAIN_OPS:
-            if node.pt is None and node.pt_hash is None:
-                raise ValueError(
-                    f"node {i}: {node.op} needs an encoded plaintext "
-                    f"operand (core.heaan.encode_plain) or a pt_hash "
-                    f"referencing the server's plaintext cache")
-            if node.pt is not None:
-                shape = np.asarray(node.pt).shape
-                if len(shape) != 2 or shape[0] != params.N \
-                        or shape[1] < params.qlimbs(logq):
-                    raise ValueError(
-                        f"node {i}: {node.op} plaintext shape {shape} "
-                        f"does not cover ({params.N}, "
-                        f"{params.qlimbs(logq)}) — encode at the node's "
-                        f"input level 2^{logq}")
-            if node.op == "mul_plain":
-                if node.pt_logp < 0:
-                    raise ValueError(
-                        f"node {i}: negative mul_plain pt_logp "
-                        f"{node.pt_logp} (0 means params.log_delta)")
-                logp += node.pt_logp or params.log_delta
-            elif node.pt_logp and node.pt_logp != logp:
-                raise ValueError(
-                    f"node {i}: add_plain operand scales differ "
-                    f"(plaintext logp {node.pt_logp} != {logp})")
-        elif node.op in ("add", "sub"):
-            if ms[0][1] != ms[1][1]:
-                raise ValueError(
-                    f"node {i}: {node.op} operand scales differ "
-                    f"(logp {ms[0][1]} != {ms[1][1]}); rescale first")
-        elif node.op == "rotate":
-            if node.r <= 0:
-                raise ValueError(
-                    f"node {i}: rotate needs a positive rotation amount r")
-        elif node.op == "rescale":
-            if node.dlogp < 0:
-                raise ValueError(
-                    f"node {i}: negative rescale dlogp {node.dlogp} "
-                    f"(0 means params.logp)")
-            dlogp = node.dlogp or params.logp
-            if logq - dlogp <= 0:
-                raise ValueError(
-                    f"node {i}: rescale by {dlogp} exhausts the "
-                    f"ciphertext (logq {logq}; needs bootstrapping)")
-            logq -= dlogp
-            logp -= dlogp
-        elif node.op == "mod_down":
-            if not 0 < node.logq2 <= logq:
-                raise ValueError(
-                    f"node {i}: mod_down target logq2={node.logq2} "
-                    f"outside (0, {logq}]")
-            logq = node.logq2
-        meta.append((logq, logp))
-    return meta
+    return propagate(ops, input_meta, params)
 
 
 def circuit_schedule(ops: List[CircuitOp],

@@ -186,7 +186,9 @@ def make_mod_down_step(st: HEStatic, mesh, logq2: int, **knobs):
 def make_addsub_step(st: HEStatic, mesh, op: str, **knobs):
     """Build step(ax1, bx1, ax2, bx2) for "add"/"sub" — §III-B limb
     arithmetic + mod-q masking, batched and placed on the mesh."""
-    assert op in ("add", "sub")
+    if op not in ("add", "sub"):             # not assert: gone under -O
+        raise ValueError(f"addsub step takes op 'add' or 'sub', "
+                         f"got {op!r}")
     sf = make_stage_fns(st, mesh, **knobs)
     fn = bigint.add if op == "add" else bigint.sub
     logq = st.logq

@@ -71,7 +71,9 @@ class ServeMetrics:
     def record_flush(self, cause: str) -> None:
         """Count why a batch was released: "full" (bucket reached the
         target), "age" (oldest request hit the deadline), "drain"."""
-        assert cause in self.FLUSH_CAUSES, cause
+        if cause not in self.FLUSH_CAUSES:   # not assert: gone under -O
+            raise ValueError(f"unknown flush cause {cause!r}; one of "
+                             f"{self.FLUSH_CAUSES}")
         self._flushes[cause] += 1
 
     def record_circuit_batch(self, n_circuits: int, n_nodes: int) -> None:

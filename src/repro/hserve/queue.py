@@ -55,19 +55,11 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.dataflow import OPS, PLAIN_OPS
 from repro.core.cipher import Ciphertext
 
 __all__ = ["Request", "Batch", "RequestQueue", "BatchAssembler", "OPS",
            "PLAIN_OPS"]
-
-# op -> number of ciphertext operands
-OPS = {"mul": 2, "add": 2, "sub": 2, "rotate": 1, "conjugate": 1,
-      "slot_sum": 1, "rescale": 1, "mod_down": 1,
-      "mul_plain": 1, "add_plain": 1}
-
-# ops whose second operand is an ENCODED PLAINTEXT riding the request
-# (no key material, no region-2 key switch — paper Fig. 2 region 1 only)
-PLAIN_OPS = ("mul_plain", "add_plain")
 
 BucketKey = Tuple  # (op, logq, extra): extra = r | n_slots | dlogp | logq2 | None
 

@@ -118,6 +118,12 @@ class HEServer:
             slices behind the in-flight batch. Mutable attribute, so
             benchmarks can A/B it on one warm server.
     lookahead: the scheduler's sibling horizon in engine batches.
+    cost_model: optional `repro.analysis.cost.CostModel` — gates the
+            scheduler's deferrals on estimated padded-batch device
+            time (limb-cheap buckets flush immediately instead of
+            waiting on siblings). Mutable attribute via
+            ``server.scheduler.cost_model``, so benchmarks can A/B it
+            on one warm server. None = pure lookahead policy.
     prefetch: table-slice prefetch on/off (only active under schedule).
     plain_cache_mib: LRU budget for the (hash, level) plaintext-operand
             cache (None = unbounded) — one-shot per-request operands
@@ -140,6 +146,7 @@ class HEServer:
                  overlap: bool = False,
                  schedule: bool = False,
                  lookahead: int = 2,
+                 cost_model=None,
                  prefetch: bool = True,
                  plain_cache_mib: Optional[float] = 256.0,
                  clock: Callable[[], float] = time.perf_counter,
@@ -166,7 +173,8 @@ class HEServer:
         # always constructed (registration is cheap bookkeeping), so
         # `schedule` can be toggled on a warm server without losing the
         # in-progress circuits' schedules
-        self.scheduler = CircuitScheduler(lookahead=lookahead)
+        self.scheduler = CircuitScheduler(lookahead=lookahead,
+                                          cost_model=cost_model)
         self._inflight: Optional[Inflight] = None
         self._circuits: Dict[int, _CircuitState] = {}
         self._node_of_rid: Dict[int, Tuple[int, int]] = {}

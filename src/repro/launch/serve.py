@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models import decode_step, init_params, prefill
 from repro.models.config import ModelConfig
 
 
@@ -51,7 +51,7 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
              use_kernels: bool = False, max_age_s: float | None = None,
              overlap: bool = False, circuit: bool = False,
              schedule: bool = False, traced: int = 0,
-             seed: int = 0) -> dict:
+             check: str = "off", seed: int = 0) -> dict:
     """Batched multi-level HE serving, driven through a `repro.client`
     HESession (the session owns keygen, encrypt/decrypt, and the
     HEServer; the raw per-op stream rides `session.server`).
@@ -139,6 +139,18 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
         # --schedule a second, STAGGERED copy rides along so the
         # scheduler's cross-circuit co-batching is exercised end-to-end.
         ops, _ = degree4_demo_circuit(params)
+        if check != "off":
+            # hslint the hand-built circuit before submitting it (the
+            # traced path runs the same analyzer inside session.run)
+            from repro.analysis import analyze_circuit
+            report = analyze_circuit(
+                ops, {"x": (params.logQ, params.logp)}, params,
+                input_nslots={"x": n})
+            print(report.render("degree4 circuit"))
+            if check == "error" and not report.ok:
+                raise ValueError("static analysis rejected the demo "
+                                 "circuit: " + "; ".join(
+                                     d.format() for d in report.errors))
         n_circ = 2 if schedule else 1
         results = {}
         for j in range(n_circ):
@@ -164,7 +176,8 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
             x = session.encrypt(zt, seed=5555 + j)
             tfuts.append(
                 (session.run([((x * x) * wz + x)
-                              .rotate(1).conj().slot_sum()])[0],
+                              .rotate(1).conj().slot_sum()],
+                             check=check)[0],
                  np.full(n, np.conj(np.roll(zt * zt * wz + zt,
                                             -1)).sum())))
 
@@ -232,6 +245,11 @@ def main():
                          "management) through the session; they share "
                          "one weight vector, so runs after the first "
                          "hit the server's plaintext-operand cache")
+    ap.add_argument("--check", default="off",
+                    choices=["off", "warn", "error"],
+                    help="static-analyze circuits before submission "
+                         "(repro.analysis): 'warn' prints findings, "
+                         "'error' refuses to submit on errors/warnings")
     ap.add_argument("--max-age-s", type=float, default=None,
                     help="continuous-batching SLO: flush a bucket once "
                          "its oldest request has waited this long "
@@ -255,7 +273,7 @@ def main():
                          use_kernels=args.kernels,
                          max_age_s=args.max_age_s, overlap=args.overlap,
                          circuit=args.circuit, schedule=args.schedule,
-                         traced=args.traced)
+                         traced=args.traced, check=args.check)
         ops = ", ".join(
             f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
             f"(p50 {d['latency_ms']['p50']}ms, "

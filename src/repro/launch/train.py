@@ -21,13 +21,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import os
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt import CheckpointManager
 from repro.data import SyntheticLM

@@ -9,7 +9,7 @@ from repro.models.attention import (
     attention_block, decode_attention, init_attn,
 )
 from repro.models.layers import init_norm, norm_apply
-from repro.models.mlp import gelu_mlp, init_gelu_mlp, init_swiglu, swiglu
+from repro.models.mlp import init_swiglu, swiglu
 from repro.models.moe import init_moe, moe_block
 from repro.models.rglru import (
     init_rglru, init_rglru_state, rglru_block, rglru_decode_step,

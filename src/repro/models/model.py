@@ -9,7 +9,7 @@ pattern groups with an unrolled tail.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

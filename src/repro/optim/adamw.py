@@ -8,7 +8,7 @@ checkpoint and sharding layers treat it like params.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp

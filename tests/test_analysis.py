@@ -1,0 +1,438 @@
+"""repro.analysis tests: the shared dataflow engine, lint rules, noise
+estimator, cost model, scheduler cost gate, session check=, and the
+CLI — plus the noise UPPER-BOUND property on 100 seeded random traced
+circuits (predicted worst-case decrypt error must dominate the
+measured error, and must not be vacuously loose).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import (CircuitError, CostModel, analyze_circuit,
+                            analyze_handle, estimate_noise, op_units,
+                            propagate, transfer, OPS, RULES)
+from repro.analysis.__main__ import main as hslint_main
+from repro.analysis.examples import EXAMPLES, build
+from repro.core.params import test_params as small_params
+from repro.hserve import CircuitOp, degree4_demo_circuit
+from repro.hserve.circuit import validate_circuit
+from repro.hserve.scheduler import CircuitScheduler
+
+PARAMS = small_params()                    # logN=5, logQ=120, logp=24
+TOP = (PARAMS.logQ, PARAMS.logp)
+
+
+# ---------------------------------------------------------------- dataflow
+
+def test_transfer_rules():
+    lp = PARAMS.logp
+    assert transfer("mul", [TOP, TOP], PARAMS) == (120, 48)
+    assert transfer("add", [TOP, TOP], PARAMS) == TOP
+    assert transfer("rescale", [(120, 48)], PARAMS, dlogp=lp) == (96, 24)
+    assert transfer("mod_down", [TOP], PARAMS, logq2=72) == (72, 24)
+    assert transfer("rotate", [TOP], PARAMS, r=3) == TOP
+    # mul_plain with an un-scaled operand picks up log_delta
+    assert transfer("mul_plain", [TOP], PARAMS, pt_logp=0) == \
+        (120, 24 + PARAMS.log_delta)
+
+
+def test_transfer_errors_cite_node_op_and_meta():
+    with pytest.raises(CircuitError, match="exhausts the modulus"):
+        transfer("rescale", [(24, 48)], PARAMS, dlogp=24, node=7)
+    try:
+        transfer("rescale", [(24, 48)], PARAMS, dlogp=24, node=7)
+    except CircuitError as e:
+        assert e.node == 7 and e.op == "rescale"
+        assert e.logq == 24 and e.logp == 48
+        assert "node 7 (rescale)" in str(e)
+        assert "(logq=24, logp=48)" in str(e)
+    with pytest.raises(CircuitError, match="levels differ"):
+        transfer("add", [TOP, (96, 24)], PARAMS)
+    with pytest.raises(CircuitError, match="scales differ"):
+        transfer("add", [(120, 48), TOP], PARAMS)
+
+
+def test_propagate_error_paths():
+    with pytest.raises(CircuitError, match="unknown input"):
+        propagate([CircuitOp("rotate", ("nope",), r=1)], {"x": TOP},
+                  PARAMS)
+    with pytest.raises(CircuitError, match="not an earlier node"):
+        propagate([CircuitOp("add", (1, "x")),
+                   CircuitOp("add", (0, "x"))], {"x": TOP}, PARAMS)
+
+
+def test_validate_circuit_is_the_shared_engine():
+    """hserve's validator and the analysis engine must be the SAME
+    computation — metas agree node for node on the demo circuit."""
+    ops, _ = degree4_demo_circuit(PARAMS)
+    assert validate_circuit(ops, {"x": TOP}, PARAMS) == \
+        propagate(ops, {"x": TOP}, PARAMS)
+
+
+def test_compile_pass_uses_the_shared_engine():
+    """A traced expression that exhausts the modulus must fail in the
+    compiler with the engine's message (no second hand-rolled check)."""
+    from repro.client import HESession
+    p = small_params(logN=4, beta_bits=32)
+    s = HESession(p, seed=0, batch=2)
+    e = s.encrypt(np.ones(p.n_slots_max) + 0j)
+    for _ in range(p.L):
+        e = e * e
+    with pytest.raises(ValueError, match="exhausts the modulus"):
+        e.result()
+
+
+# ------------------------------------------------------------------- noise
+
+def test_noise_recurrences():
+    ops = [CircuitOp("mul", ("x", "y")),
+           CircuitOp("rescale", (0,), dlogp=PARAMS.logp),
+           CircuitOp("mod_down", (1,), logq2=72)]
+    nn = estimate_noise(ops, {"x": TOP, "y": TOP}, PARAMS)
+    assert len(nn) == 3
+    assert all(n.nu > 0 and np.isfinite(n.nu) for n in nn)
+    # rescale shrinks noise (divides by 2^logp, adds only rounding)
+    assert nn[1].nu < nn[0].nu
+    # mod_down is exact: same nu, new logq
+    assert nn[2].nu == nn[1].nu and nn[2].logq == 72
+    assert nn[1].precision_bits == PARAMS.logp - np.log2(nn[1].nu)
+
+
+# ------------------------------------------------------------------- rules
+
+def _report(ops, input_meta=None, **kw):
+    return analyze_circuit(ops, input_meta or {"x": TOP}, PARAMS, **kw)
+
+
+def _ids(report):
+    return [d.rule for d in report.diagnostics]
+
+
+def test_hs001_dataflow_violation_is_an_error_diagnostic():
+    # mul+rescale pairs: the (L+1)-th rescale has no modulus left
+    ops = [CircuitOp("mul", ("x", "x")),
+           CircuitOp("rescale", (0,), dlogp=PARAMS.logp)]
+    for _ in range(PARAMS.L):
+        ops += [CircuitOp("mul", (len(ops) - 1, len(ops) - 1)),
+                CircuitOp("rescale", (len(ops),), dlogp=PARAMS.logp)]
+    r = _report(ops)
+    assert not r.ok
+    assert [d.rule for d in r.errors] == ["HS001"]
+    assert "exhausts the modulus" in r.errors[0].message
+
+
+def test_hs002_waterline():
+    ops = [CircuitOp("add", ("x", "x"))]
+    clean = _report(ops)
+    assert "HS002" not in _ids(clean)
+    low = _report(ops, waterline_bits=100.0)
+    w = [d for d in low.diagnostics if d.rule == "HS002"]
+    assert w and w[0].severity == "warning"
+    assert "waterline" in w[0].message
+
+
+def test_hs003_dead_node():
+    ops = [CircuitOp("add", ("x", "x")),      # dead: nothing uses it
+           CircuitOp("sub", ("x", "x")),
+           CircuitOp("add", (1, "x"))]
+    d = [x for x in _report(ops).diagnostics if x.rule == "HS003"]
+    assert len(d) == 1 and d[0].node == 0
+    assert "never consumed" in d[0].message
+
+
+def test_hs004_rotations():
+    n = PARAMS.n_slots_max
+    noop = _report([CircuitOp("rotate", ("x",), r=n)])
+    d = [x for x in noop.diagnostics if x.rule == "HS004"]
+    assert d and d[0].severity == "warning" and "no-op" in d[0].message
+
+    comp = [CircuitOp("rotate", ("x",), r=5)]
+    info = [x for x in _report(comp).diagnostics if x.rule == "HS004"]
+    assert info and info[0].severity == "info"       # keys unknown
+    warn = [x for x in _report(
+        comp, provisioned_rotations={1, 2, 4}).diagnostics
+        if x.rule == "HS004"]
+    assert warn and warn[0].severity == "warning"    # 5 missing, 1+4 held
+    assert "1+4" in warn[0].message
+
+
+def test_hs005_eager_rescale():
+    eager = [CircuitOp("mul", ("x", "x")),
+             CircuitOp("rescale", (0,), dlogp=PARAMS.logp)]
+    assert "HS005" in _ids(_report(eager))
+    lazy = eager + [CircuitOp("mod_down", ("x",), logq2=96),
+                    CircuitOp("mul", (1, 2))]
+    assert "HS005" not in _ids(_report(lazy))   # the rescale feeds a mul
+
+
+def test_hs006_depth_headroom():
+    shallow = [CircuitOp("add", ("x", "x"))]    # 4 spare levels at logQ
+    d = [x for x in _report(shallow).diagnostics if x.rule == "HS006"]
+    assert d and d[0].severity == "info" and "headroom" in d[0].message
+
+
+def test_rules_registry_is_complete():
+    assert sorted(RULES) == [f"HS00{i}" for i in range(1, 7)]
+    assert RULES["HS001"].severity == "error"
+
+
+# -------------------------------------------------------------------- cost
+
+def _bench_dict():
+    return {"params": {"logN": PARAMS.logN, "logQ": PARAMS.logQ,
+                       "logp": PARAMS.logp,
+                       "beta_bits": PARAMS.beta_bits},
+            "levels": [120, 96],
+            "mul_per_s": 50.0, "rotate_per_s": 100.0,
+            "plain": {"mul_plain_per_s": 200.0,
+                      "add_plain_per_s": 5000.0}}
+
+
+def test_cost_model_fit_and_ordering():
+    cm = CostModel.from_bench(_bench_dict())
+    assert set(cm.kappa) == {"mul", "rotate", "mul_plain", "add_plain"}
+    # transforms dominate limb passes; deeper (higher logq) costs more
+    assert cm.op_seconds("mul", 120) > cm.op_seconds("add", 120)
+    assert cm.op_seconds("mul", 120) >= cm.op_seconds("mul", 48)
+    # unmeasured ops fall back to rotate's key-switch kappa
+    assert cm.op_seconds("conjugate", 120) == cm.op_seconds("rotate", 120)
+    assert op_units("slot_sum", 120, PARAMS, n_slots=8) > \
+        op_units("rotate", 120, PARAMS)
+
+
+def test_cost_model_rejects_empty_bench():
+    with pytest.raises(ValueError, match="no usable throughputs"):
+        CostModel.from_bench({"params": _bench_dict()["params"],
+                              "levels": [120]})
+
+
+def test_cost_model_from_committed_bench_file():
+    from pathlib import Path
+    bench = Path(__file__).resolve().parent.parent / "BENCH_serve_he.json"
+    cm = CostModel.from_bench(bench)
+    assert cm.calibrated_from.endswith("BENCH_serve_he.json")
+    ops, _ = degree4_demo_circuit(cm.params)
+    total, per = cm.estimate_circuit(
+        ops, {"x": (cm.params.logQ, cm.params.logp)})
+    assert len(per) == len(ops) and total == pytest.approx(sum(per))
+    assert total > 0
+
+
+def test_analyze_circuit_reports_cost():
+    cm = CostModel.from_bench(_bench_dict())
+    r = _report([CircuitOp("mul", ("x", "x"))], cost_model=cm)
+    assert r.cost_s and r.cost_s > 0
+    assert r.calibrated_from == "<dict>"
+    assert "est" in r.render("c")  # cost line surfaces in pretty output
+
+
+# -------------------------------------------------- scheduler cost gate
+
+def test_worth_deferring_gate():
+    sch = CircuitScheduler()
+    assert sch.cost_model is None
+    # no model: legacy behavior — always worth deferring
+    assert sch._worth_deferring(("mul", 120, None), 1, 4)
+
+    big = CostModel({"mul": 1.0}, 1.0, PARAMS)      # ~seconds per op
+    tiny = CostModel({"mul": 1e-15}, 1e-15, PARAMS)
+    sch = CircuitScheduler(cost_model=big)
+    assert sch._worth_deferring(("mul", 120, None), 1, 4)
+    assert sch.cost_skips == 0
+    sch.cost_model = tiny
+    assert not sch._worth_deferring(("mul", 120, None), 1, 4)
+    assert sch.cost_skips == 1
+    # a full bucket has no padding to buy back — but the gate only ever
+    # sees depth < batch (the drain flush checks that first)
+    sch.reset_counters()
+    assert sch.cost_skips == 0
+
+
+def test_cost_gated_scheduling_is_bitwise_identical():
+    """Drain two staggered degree-4 circuits with the deferral gate
+    consulting a cost model vs not: results must match bit for bit
+    (the gate may only change BATCHING, never values)."""
+    from repro.core import heaan as H
+    from repro.core.keys import keygen
+    from repro.core.rotate import conj_keygen
+    from repro.hserve import HEServer
+
+    p = small_params(logN=4, beta_bits=32)
+    sk, pk, evk = keygen(p, seed=0)
+    server = HEServer(p, evk, {}, conj_keygen(p, sk), batch=2,
+                      schedule=True)
+    ops, _ = degree4_demo_circuit(p)
+    rng = np.random.default_rng(3)
+    n = p.n_slots_max
+    cts = [H.encrypt_message(rng.normal(size=n) + 0j, pk, p, seed=s)
+           for s in (1, 2)]
+
+    def staggered():
+        res = {}
+        c1 = server.submit_circuit(ops, {"x": cts[0]})
+        res.update(dict(server.poll(flush=True)))
+        c2 = server.submit_circuit(ops, {"x": cts[1]})
+        res.update(server.drain())
+        return res[c1], res[c2]
+
+    outs_none = staggered()
+    # at toy params EVERY bucket is below defer_min_s: the gate skips
+    # every deferral (pure flush-now behavior) — maximally different
+    # batching from the defer-always baseline, same bits
+    server.scheduler.cost_model = CostModel.from_bench(_bench_dict())
+    skips0 = server.scheduler.cost_skips
+    outs_cost = staggered()
+    assert server.scheduler.cost_skips > skips0
+    assert server.scheduler.stats()["cost_model"] is True
+    for a, b in zip(outs_none, outs_cost):
+        assert (np.asarray(a.ax) == np.asarray(b.ax)).all()
+        assert (np.asarray(a.bx) == np.asarray(b.bx)).all()
+
+
+# --------------------------------------------------- session check= knob
+
+@pytest.fixture(scope="module")
+def session4():
+    from repro.client import HESession
+    p = small_params(logN=4, beta_bits=32)
+    s = HESession(p, seed=0, batch=4)
+    return p, s
+
+
+def test_run_check_validates_its_argument(session4):
+    _, s = session4
+    x = s.encrypt(np.ones(s.params.n_slots_max) + 0j)
+    with pytest.raises(ValueError, match="check must be"):
+        s.run([x + x], check="loud")
+
+
+def test_run_check_off_warn_error(session4):
+    p, s = session4
+    z = np.full(p.n_slots_max, 0.001 + 0j)
+    x = s.encrypt(z)
+    # big plaintext weights sink the predicted precision below the
+    # waterline -> HS002 warning-severity finding
+    bad = (x * 3000.0) * (x * 3000.0)
+
+    with pytest.raises(ValueError,
+                       match="static analysis rejected the run"):
+        s.run([bad], check="error")
+
+    with pytest.warns(UserWarning, match="HS002"):
+        futs = s.run([bad], check="warn")
+    s.drain()
+    assert len(s.last_reports) == 1
+    assert s.last_reports[0].warnings
+    # still served under "warn" — and noisily, which is the point: the
+    # flagged circuit's result carries visible error (the waterline
+    # warning was RIGHT), so only a loose tolerance holds
+    got = s.decrypt(futs[0].result())
+    np.testing.assert_allclose(got, (z * 3000.0) ** 2, atol=0.5)
+
+    clean = s.run([x + x], check="error")   # a clean circuit passes
+    s.drain()
+    assert s.last_reports[0].ok
+    np.testing.assert_allclose(s.decrypt(clean[0].result()), 2 * z,
+                               atol=1e-4)
+
+
+def test_analyze_handle_bare_input(session4):
+    p, s = session4
+    x = s.encrypt(np.ones(p.n_slots_max) + 0j)
+    r = analyze_handle(x, p)
+    assert r.ok and r.n_ops == 0 and r.out_precision_bits is None
+
+
+# ---------------------------------------------------------------- the CLI
+
+def test_cli_json_over_all_examples(capsys):
+    rc = hslint_main(["--json"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    reports = json.loads(out)
+    assert set(reports) == set(EXAMPLES)
+    for name, d in reports.items():
+        assert d["ok"] is True, f"{name}: {d['diagnostics']}"
+        assert d["n_ops"] > 0 and "note" in d
+        assert d["out"]["precision_bits"] > 0
+
+
+def test_cli_pretty_and_bench_calibration(capsys, tmp_path):
+    bench = tmp_path / "b.json"
+    bench.write_text(json.dumps(_bench_dict()))
+    rc = hslint_main(["degree4", "--bench", str(bench)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "degree4" in out and "est" in out
+
+
+def test_cli_unknown_example():
+    with pytest.raises(ValueError, match="unknown example"):
+        build("nope")
+
+
+# -------------------------------------- typed errors (ex-asserts) sweep
+
+def test_metrics_flush_cause_is_typed_error():
+    from repro.hserve.metrics import ServeMetrics
+    with pytest.raises(ValueError, match="unknown flush cause"):
+        ServeMetrics().record_flush("panic")
+
+
+def test_engine_addsub_step_is_typed_error():
+    from repro.hserve.engine import make_addsub_step
+    with pytest.raises(ValueError, match="addsub step takes op"):
+        make_addsub_step(None, None, op="mul")
+
+
+# ----------------------------------------- the noise upper-bound property
+
+# documented slack contract (docs/ANALYSIS.md): the worst-case bound
+# must HOLD on every circuit, and at test parameters (logN=4, depth<=4)
+# stay within these many bits of the measured error — loose enough to
+# be a sound worst case, tight enough to mean something
+SLACK_MAX_BITS = 40.0
+SLACK_MEDIAN_BITS = 20.0
+N_CIRCUITS = 100
+
+
+def test_noise_bound_on_100_random_traced_circuits(session4):
+    p, s = session4
+    rng = np.random.default_rng(42)
+    n = p.n_slots_max
+    leaves = []
+    for i in range(2):
+        z = (rng.normal(size=n) + 1j * rng.normal(size=n)) * 0.5
+        leaves.append((s.encrypt(z, seed=100 + i), z))
+    in_bound = max(float(np.max(np.abs(z))) for _, z in leaves)
+
+    from repro.client.testing import random_expr
+    slacks = []
+    for base in range(0, N_CIRCUITS, 20):     # chunked: one drain per 20
+        exprs = []
+        for k in range(base, base + 20):
+            r = np.random.default_rng(1000 + k)
+            h, shadow = random_expr(r, leaves, n_ops=3 + k % 3,
+                                    max_depth=1 + k % 4)
+            exprs.append((h, shadow))
+        futs = s.run([h for h, _ in exprs])
+        s.drain()
+        for (h, shadow), f in zip(exprs, futs):
+            measured = float(np.max(np.abs(s.decrypt(f.result())
+                                           - shadow)))
+            rep = analyze_handle(h, p, input_bounds=in_bound)
+            predicted = 2.0 ** rep.noise[-1].error_bits
+            assert measured <= predicted, (
+                f"circuit {base + exprs.index((h, shadow))}: measured "
+                f"error {measured:.3e} exceeds predicted bound "
+                f"{predicted:.3e}")
+            if measured > 0:
+                slacks.append(float(np.log2(predicted / measured)))
+
+    # non-vacuity: the bound tracks reality within the documented slack
+    assert slacks, "every measured error was exactly zero?"
+    assert float(np.median(slacks)) <= SLACK_MEDIAN_BITS
+    assert max(slacks) <= SLACK_MAX_BITS, (
+        f"bound is vacuous: max slack {max(slacks):.1f} bits")

@@ -54,8 +54,58 @@ def test_checker_flags_broken_links_and_bad_bench(tmp_path):
     assert any("changed a result bit" in e for e in errs)
 
 
+def test_checker_analysis_block_failure_paths(tmp_path):
+    """The three analysis-block failure modes must each produce their
+    own distinct message: a missing block, a per-phase schema
+    violation, and a false bitwise guard (which is a DIFFERENT message
+    from the scheduler/client bitwise failures, so a red CI log says
+    which A/B broke)."""
+    bench = tmp_path / "BENCH_serve_he.json"
+
+    # 1. block missing entirely
+    bench.write_text('{"batch": 2}')
+    errs = check_docs.check_bench(bench)
+    assert any("missing key 'analysis'" in e for e in errs)
+
+    # 2. block present but malformed: wrong type at the top level and a
+    #    phase record missing its counters
+    bench.write_text(
+        '{"analysis": {"circuits": 2, "calibrated_from": 3,'
+        ' "est_circuit_s": 0.01, "bitwise_identical": true,'
+        ' "nocost": {"drain_s": 0.1}, "cost": {}}}')
+    errs = check_docs.check_bench(bench)
+    assert any("analysis.calibrated_from: expected str" in e for e in errs)
+    assert any("analysis.nocost: missing key 'cost_skips'" in e
+               for e in errs)
+    assert any("analysis.cost: missing key 'drain_s'" in e for e in errs)
+    assert not any("changed a result bit" in e for e in errs)
+
+    # 3. bitwise guard false — the cost-model-specific message
+    bench.write_text(
+        '{"analysis": {"circuits": 2, "calibrated_from": "self",'
+        ' "est_circuit_s": 0.01, "bitwise_identical": false,'
+        ' "nocost": {"drain_s": 0.1, "batches": 1, "mul_pad_frac": 0.0,'
+        '  "deferrals": 0, "cost_skips": 0},'
+        ' "cost": {"drain_s": 0.1, "batches": 1, "mul_pad_frac": 0.0,'
+        '  "deferrals": 0, "cost_skips": 0}}}')
+    errs = check_docs.check_bench(bench)
+    assert any("cost-model scheduling changed a result bit" in e
+               for e in errs)
+    assert not any("scheduler: scheduling changed" in e for e in errs)
+    assert not any("traced frontend changed" in e for e in errs)
+
+
 def test_ci_runs_the_docs_step():
     """The acceptance criterion says the link check runs in CI — pin the
     workflow wiring so a refactor can't silently drop it."""
     wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
     assert "tools/check_docs.py" in wf
+
+
+def test_ci_runs_lint_and_hslint_steps():
+    """Same pinning for this PR's additions: the ruff+mypy lint job and
+    the analyzer CLI pass over the example circuits."""
+    wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "ruff check ." in wf
+    assert "mypy src/repro/analysis" in wf
+    assert "repro.analysis" in wf.split("fast-tier")[1]

@@ -4,7 +4,6 @@ checkpoint atomicity + GC + elastic reshard."""
 import os
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,6 @@ from repro.ckpt import CheckpointManager
 from repro.configs.registry import get_arch
 from repro.launch.train import TrainConfig, Trainer, run_with_restarts
 from repro.runtime import FailureInjector, StepMonitor
-from repro.runtime.failures import SimulatedFailure
 
 
 def _cfg():

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 
 from repro.core import test_params as small_params
 from repro.core import make_context
-from repro.core.context import build_icrt_tables
 from repro.kernels.crt.ops import crt_op
 from repro.kernels.crt.ref import crt_ref
 from repro.kernels.icrt.ops import icrt_op

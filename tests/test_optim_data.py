@@ -1,7 +1,6 @@
 """Optimizer, schedule, compression, and data-pipeline unit tests."""
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

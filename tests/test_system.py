@@ -8,7 +8,6 @@ composition the examples ship.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import heaan as H
@@ -17,7 +16,6 @@ from repro.core.keys import keygen
 from repro.configs.registry import ARCHS, get_arch, get_shapes, SHAPES
 from repro.launch.train import TrainConfig, Trainer
 from repro.launch.serve import generate
-from repro.models import init_params
 
 
 def test_registry_covers_assignment():

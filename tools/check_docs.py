@@ -53,6 +53,7 @@ BENCH_SCHEMA = {
     "plain": dict,
     "scheduler": dict,
     "client": dict,
+    "analysis": dict,
 }
 PARAMS_KEYS = ("logN", "logQ", "logp", "beta_bits")
 TRICKLE_SCHEMA = {"requests": int, "max_age_s": NUM, "p50_ms": NUM,
@@ -75,6 +76,14 @@ CLIENT_SCHEMA = {"circuits": int, "hand_drain_s": NUM,
                  "traced_mul_pad_frac": NUM, "cross_circuit_rate": NUM,
                  "plain_cache_hits": int, "plain_cache_hit_rate": NUM,
                  "bitwise_identical": bool}
+# the repro.analysis cost-model scheduler A/B (hslint calibration loop)
+ANALYSIS_SCHEMA = {"circuits": int, "calibrated_from": str,
+                   "est_circuit_s": NUM, "nocost": dict, "cost": dict,
+                   "bitwise_identical": bool}
+# per-phase record inside analysis.{nocost,cost}
+ANALYSIS_PHASE_SCHEMA = {"drain_s": NUM, "batches": int,
+                         "mul_pad_frac": NUM, "deferrals": int,
+                         "cost_skips": int}
 
 
 def check_links(repo: Path) -> list:
@@ -153,6 +162,17 @@ def check_bench(bench: Path) -> list:
         if cl.get("plain_cache_hits") == 0:
             errors.append(f"{bench.name}.client: traced circuits never "
                           "hit the plaintext-operand cache")
+    if isinstance(obj.get("analysis"), dict):
+        an = obj["analysis"]
+        errors += _check_block(an, ANALYSIS_SCHEMA, f"{bench.name}.analysis")
+        for phase in ("nocost", "cost"):
+            if isinstance(an.get(phase), dict):
+                errors += _check_block(
+                    an[phase], ANALYSIS_PHASE_SCHEMA,
+                    f"{bench.name}.analysis.{phase}")
+        if an.get("bitwise_identical") is False:
+            errors.append(f"{bench.name}.analysis: cost-model scheduling "
+                          "changed a result bit (bitwise_identical false)")
     return errors
 
 

@@ -1,0 +1,17 @@
+#!/usr/bin/env python3
+"""hslint — the repro.analysis CLI, runnable straight from a checkout.
+
+Thin wrapper so CI and humans can `python tools/hslint.py` without
+setting PYTHONPATH; all behavior (and --help) lives in
+`repro.analysis.__main__`.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
