@@ -32,7 +32,12 @@ additions, schema documented in docs/SERVING.md):
     degree-4 pair: drain walls, batch counts, mul padding, deferral /
     cost-skip counts, the model's estimated device-seconds per circuit,
     and a bitwise-identical guard (cost-gated scheduling must never
-    change a result bit).
+    change a result bit);
+  - "obs": the repro.obs tracing overhead A/B — the same mul stream
+    drained with the request-lifecycle Tracer detached vs attached,
+    interleaved min-of-3: drain walls, overhead fraction (gated ≤2% by
+    tools/check_docs.py — always-on tracing must be production-safe),
+    trace event count, and a bitwise-identical guard.
 
     PYTHONPATH=src python benchmarks/serve_he.py                # quick
     PYTHONPATH=src python benchmarks/serve_he.py --full         # Table III
@@ -300,6 +305,44 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
         for a, b in zip(outs_n, outs_c))
     assert an_bitwise, "cost-model scheduling changed a result bit"
 
+    # ---- obs: lifecycle-tracing overhead A/B ----------------------------
+    # the same mul stream drained with the repro.obs Tracer detached vs
+    # attached (every submit/flush/dispatch/complete event recorded).
+    # Interleaved min-of-3 so one GC pause or turbo transition cannot
+    # poison either arm; the gate (tools/check_docs.py OBS_SCHEMA) is
+    # ≤2% overhead and bitwise-identical results — always-on tracing
+    # must be safe to leave enabled in production serving.
+    from repro.obs import Tracer
+
+    obs_muls = overlap_muls
+
+    def obs_drain(tracer):
+        server.tracer = tracer
+        for i in range(obs_muls):
+            cs = by_level[logqs[i % levels]]
+            server.submit_mul(cs[i % len(cs)], cs[(i + 1) % len(cs)])
+        t0 = time.perf_counter()
+        res = server.drain()
+        server.tracer = None
+        return time.perf_counter() - t0, [res[r] for r in sorted(res)]
+
+    off_walls, on_walls = [], []
+    trace_events = 0
+    obs_bitwise = True
+    for _ in range(3):
+        w_off, outs_off = obs_drain(None)
+        tr_on = Tracer()
+        w_on, outs_on = obs_drain(tr_on)
+        off_walls.append(w_off)
+        on_walls.append(w_on)
+        trace_events = len(tr_on)
+        obs_bitwise &= all(
+            bool((np.asarray(a.ax) == np.asarray(b.ax)).all()
+                 and (np.asarray(a.bx) == np.asarray(b.bx)).all())
+            for a, b in zip(outs_off, outs_on))
+    assert obs_bitwise, "tracing changed a result bit"
+    obs_off_s, obs_on_s = min(off_walls), min(on_walls)
+
     # ---- trickle: arrival rate < batch; only the age policy flushes.
     # adaptive_target is disabled here on purpose: with it on, a trickle
     # is released the moment the target shrinks to the arrival rate and
@@ -389,6 +432,14 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
             "nocost": nocost,
             "cost": withcost,
             "bitwise_identical": an_bitwise,
+        },
+        "obs": {
+            "muls": obs_muls,
+            "off_drain_s": round(obs_off_s, 4),
+            "on_drain_s": round(obs_on_s, 4),
+            "overhead_frac": round(obs_on_s / obs_off_s - 1.0, 4),
+            "trace_events": trace_events,
+            "bitwise_identical": obs_bitwise,
         },
     }
 

@@ -113,6 +113,13 @@ class HESession:
             if conj_key is not None:
                 server.cache.add_conj_key(conj_key)
         self.server = server
+        # client-plane telemetry rides the server's registry so one
+        # snapshot (and one heartbeat) carries the whole stack
+        reg = getattr(server, "registry", None)
+        self._c_runs = reg.counter("client.runs") \
+            if reg is not None else None
+        self._c_circuits = reg.counter("client.circuits") \
+            if reg is not None else None
         self.auto_keys = auto_keys
         self._futures: Dict[int, CipherFuture] = {}
         # raw server-submit results completed by a future-triggered
@@ -246,6 +253,9 @@ class HESession:
             to_register.append(CipherFuture(self, cid))
             futures.append(to_register[-1])
         self._futures.update((f.cid, f) for f in to_register)
+        if self._c_runs is not None:
+            self._c_runs.inc()
+            self._c_circuits.inc(len(to_register))
         return futures
 
     def _check_compiled(self, compiled, check: str) -> None:

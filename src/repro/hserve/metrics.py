@@ -19,6 +19,12 @@ the serving runtime the numbers to prove it per op kind:
 
 Everything is plain host-side accumulation — no jax dependency — so the
 metrics can run on a frontend host next to the RequestQueue.
+
+Memory contract: latency and queue-depth streams accumulate into
+BOUNDED reservoirs (`repro.obs.stats.Reservoir`), not lists — a
+week-old server at production request counts holds a fixed few thousand
+samples per op, with count/mean/max exact and p50/p99 sampled (within
+tolerance; pinned by tests/test_obs.py against exact percentiles).
 """
 
 from __future__ import annotations
@@ -27,7 +33,7 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, List
 
-import numpy as np
+from repro.obs.stats import Reservoir
 
 __all__ = ["ServeMetrics"]
 
@@ -38,7 +44,7 @@ class _OpStats:
     valid: int = 0
     padded: int = 0
     wall_s: float = 0.0
-    latencies: List[float] = dataclasses.field(default_factory=list)
+    latencies: Reservoir = dataclasses.field(default_factory=Reservoir)
 
 
 class ServeMetrics:
@@ -48,7 +54,7 @@ class ServeMetrics:
 
     def __init__(self):
         self._ops: Dict[str, _OpStats] = defaultdict(_OpStats)
-        self._depths: List[int] = []
+        self._depths = Reservoir()
         self._levels: set = set()
         self._flushes: Dict[str, int] = {c: 0 for c in self.FLUSH_CAUSES}
         self._circuit_batches = 0
@@ -66,7 +72,7 @@ class ServeMetrics:
         self._levels.add(logq)
 
     def record_depth(self, depth: int) -> None:
-        self._depths.append(depth)
+        self._depths.add(depth)
 
     def record_flush(self, cause: str) -> None:
         """Count why a batch was released: "full" (bucket reached the
@@ -86,14 +92,11 @@ class ServeMetrics:
         if n_circuits >= 2:
             self._cross_circuit_batches += 1
 
-    @staticmethod
-    def _pct(xs: List[float], q: float) -> float:
-        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
-
     def summary(self) -> dict:
         per_op = {}
         for op, s in sorted(self._ops.items()):
             served = s.valid + s.padded
+            lat = s.latencies
             per_op[op] = {
                 "batches": s.batches,
                 "requests": s.valid,
@@ -102,10 +105,11 @@ class ServeMetrics:
                 "wall_s": round(s.wall_s, 4),
                 "pad_frac": round(s.padded / served, 4) if served else 0.0,
                 "latency_ms": {
-                    "p50": round(1e3 * self._pct(s.latencies, 50), 3),
-                    "p99": round(1e3 * self._pct(s.latencies, 99), 3),
-                    "max": round(1e3 * max(s.latencies), 3)
-                    if s.latencies else 0.0,
+                    "p50": round(1e3 * lat.percentile(50), 3),
+                    "p99": round(1e3 * lat.percentile(99), 3),
+                    # max is exact — reservoirs track extremes outside
+                    # the sample
+                    "max": round(1e3 * lat.max, 3) if lat else 0.0,
                 },
             }
         return {
@@ -121,9 +125,9 @@ class ServeMetrics:
                 if self._circuit_batches else 0.0,
             },
             "queue_depth": {
-                "mean": round(float(np.mean(self._depths)), 2)
-                if self._depths else 0.0,
-                "max": int(max(self._depths)) if self._depths else 0,
+                "mean": round(self._depths.mean, 2) if self._depths
+                else 0.0,
+                "max": int(self._depths.max) if self._depths else 0,
                 "samples": len(self._depths),
             },
         }

@@ -74,6 +74,7 @@ from repro.hserve.queue import Batch, BatchAssembler, PLAIN_OPS, \
     RequestQueue
 from repro.hserve.scheduler import CircuitScheduler
 from repro.hserve.tables import TableCache
+from repro.obs.registry import MetricsRegistry
 
 __all__ = ["HEServer"]
 
@@ -131,6 +132,23 @@ class HEServer:
     clock:  time source for ages/latencies (injectable for deterministic
             tests; defaults to time.perf_counter). Threaded into the
             RequestQueue so direct queue submits share the timeline.
+    tracer: optional `repro.obs.Tracer` — request-lifecycle spans
+            (submit → enqueue → bucket_wait → flush → batch_assemble →
+            dispatch → device_wall → complete) and engine spans land in
+            it; export with tracer.write(path) (Chrome trace-event
+            JSON). None (default) records nothing and allocates nothing
+            per request. Mutable via the `tracer` property (propagates
+            to the engine and table cache), so benchmarks toggle it on
+            a warm server.
+    profile_stages: run engine steps EAGERLY with per-stage device
+            fences so `engine.stage_timer` attributes mul wall to the
+            paper's Fig. 3 CRT/NTT/modmul/iCRT buckets. Same bits,
+            slower — a measurement mode, not a serving mode.
+    registry: optional `repro.obs.MetricsRegistry` to publish into
+            (one is created when absent). ServeMetrics, TableCache,
+            CircuitScheduler, and the engine register as pull sources;
+            `registry.snapshot()` is the live-telemetry JSON heartbeats
+            embed.
     """
 
     # the arrival-rate estimate decays over this many deadline windows,
@@ -150,6 +168,8 @@ class HEServer:
                  prefetch: bool = True,
                  plain_cache_mib: Optional[float] = 256.0,
                  clock: Callable[[], float] = time.perf_counter,
+                 tracer=None, profile_stages: bool = False,
+                 registry=None,
                  **engine_knobs):
         if mesh is None:
             from repro.launch.mesh import make_host_mesh
@@ -166,7 +186,9 @@ class HEServer:
         self.cache = TableCache(params, evk, rot_keys, conj_key,
                                 plain_cache_mib=plain_cache_mib)
         self.engine = OpEngine(params, mesh, self.cache,
-                               use_kernels=use_kernels, **engine_knobs)
+                               use_kernels=use_kernels, tracer=tracer,
+                               profile_stages=profile_stages,
+                               **engine_knobs)
         self.queue = RequestQueue(clock=clock)
         self.assembler = BatchAssembler(batch)
         self.metrics = ServeMetrics()
@@ -178,6 +200,37 @@ class HEServer:
         self._inflight: Optional[Inflight] = None
         self._circuits: Dict[int, _CircuitState] = {}
         self._node_of_rid: Dict[int, Tuple[int, int]] = {}
+        self._tracer = tracer
+        self.cache.tracer = tracer
+        # telemetry plane: every subsystem publishes into ONE registry.
+        # Sources read through `self.metrics` (a lambda, not the bound
+        # method) so reset_metrics()'s window swap stays published.
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.registry.add_source("serve", lambda: self.metrics.summary())
+        self.registry.add_source("cache", self.cache.stats)
+        self.registry.add_source("scheduler", self.scheduler.stats)
+        self.registry.add_source(
+            "engine", lambda: {"steps_compiled": self.engine.n_compiled,
+                               "compile_s": round(self.engine.compile_s,
+                                                  3)})
+        self._c_polls = self.registry.counter("serve.polls")
+        self._c_batches = self.registry.counter("serve.batches")
+        self._c_requests = self.registry.counter("serve.requests")
+        self._g_depth = self.registry.gauge("serve.queue.depth")
+        self._h_wall = self.registry.histogram("serve.batch.wall_s")
+
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, t) -> None:
+        """Re-point the trace sink everywhere at once (engine + table
+        cache + the profile-mode stage timer follow the server's)."""
+        self._tracer = t
+        self.engine.tracer = t
+        self.cache.tracer = t
 
     # ---- request intake --------------------------------------------------
 
@@ -186,6 +239,11 @@ class HEServer:
                pt_hash: Optional[str] = None,
                pt_owned: bool = False) -> int:
         """Enqueue one request; returns its rid (used to match results).
+
+        Lifecycle trace: a traced submit lands two instants — "submit"
+        (intake, before validation) and "enqueue" (accepted into its
+        bucket) — on the "requests" lane; the untraced path takes no
+        clock reads and allocates nothing.
 
         Key availability is checked HERE, not at execution: a request
         the engine cannot serve must never enter the queue (it would
@@ -201,6 +259,8 @@ class HEServer:
         set it themselves. t_submit comes from the queue's clock (the
         server's injected one).
         """
+        tr = self._tracer
+        t_in = self._clock() if tr is not None else 0.0
         register = None
         if op in PLAIN_OPS and pt_hash is not None:
             first = cts[0] if isinstance(cts, (tuple, list)) else cts
@@ -241,6 +301,12 @@ class HEServer:
                                 pt=pt, pt_logp=pt_logp, pt_owned=pt_owned)
         if register is not None:
             self.cache.put_plain(register[0], register[1], pt)
+        self._c_requests.inc()
+        if tr is not None:
+            tr.event("submit", cat="lifecycle", lane="requests", ts=t_in,
+                     args={"rid": rid, "op": op})
+            tr.event("enqueue", cat="lifecycle", lane="requests",
+                     ts=self._clock(), args={"rid": rid, "op": op})
         return rid
 
     def submit_mul(self, c1: Ciphertext, c2: Ciphertext) -> int:
@@ -424,6 +490,8 @@ class HEServer:
         progress guarantee), so a flush-poll on a non-empty queue can
         never return without running work.
         """
+        self._c_polls.inc()
+        self._g_depth.set(self.queue.depth)
         self.metrics.record_depth(self.queue.depth)
         now = self._clock()
         key, cause = self.queue.ready_key(self._bucket_target(now)), "full"
@@ -436,17 +504,51 @@ class HEServer:
         if key is None:
             return self._retire(self._take_inflight())
         reqs = self.queue.pop_bucket(key, self.batch)
-        b = self.assembler.assemble(reqs)
+        tr = self._tracer
+        if tr is not None:
+            # bucket_wait per request: submit → popped from its bucket
+            t_pop = self._clock()
+            for r in reqs:
+                tr.event("bucket_wait", cat="lifecycle", lane="requests",
+                         ts=r.t_submit, dur=t_pop - r.t_submit,
+                         args={"rid": r.rid, "op": r.op})
+            tr.event("flush", cat="lifecycle", lane="server", ts=t_pop,
+                     args={"cause": cause, "op": key[0], "logq": key[1],
+                           "n": len(reqs)})
+            with tr.span("batch_assemble", cat="lifecycle", lane="server",
+                         args={"op": key[0], "n": len(reqs)}):
+                b = self.assembler.assemble(reqs)
+        else:
+            b = self.assembler.assemble(reqs)
         self.metrics.record_flush(cause)
+        self._c_batches.inc()
         if self.overlap:
             prev = self._take_inflight()
-            self._inflight = self.engine.dispatch(b)
+            self._inflight = self._dispatch(b)
             self._prefetch_next(b)            # rides the in-flight step
             return self._retire(prev)
-        inf = self.engine.dispatch(b)
+        inf = self._dispatch(b)
+        if self.engine.profile_stages:
+            # profiling dispatch is synchronous (fenced stage blocks):
+            # there is no in-flight step to hide the prefetch behind,
+            # and running it before wait() would book its host-side
+            # table-build time into this batch's device wall — sinking
+            # the Fig. 3 stage-coverage attribution.
+            outs, wall = self.engine.wait(inf)
+            self._prefetch_next(b)
+            return self._complete(b, outs, wall)
         self._prefetch_next(b)                # host work while b runs
         outs, wall = self.engine.wait(inf)
         return self._complete(b, outs, wall)
+
+    def _dispatch(self, b: Batch) -> Inflight:
+        """engine.dispatch under a "dispatch" lifecycle span (place +
+        async launch; the device wall lands separately at wait)."""
+        if self._tracer is None:
+            return self.engine.dispatch(b)
+        with self._tracer.span("dispatch", cat="lifecycle", lane="server",
+                               args={"op": b.op, "batch": b.size}):
+            return self.engine.dispatch(b)
 
     def _prefetch_next(self, b: Batch) -> None:
         """Materialize the table slices the NEXT levels need while `b`
@@ -483,6 +585,13 @@ class HEServer:
         self.metrics.record_batch(
             b.op, b.logq, b.n_valid, b.n_pad, wall,
             [done - r.t_submit for r in b.requests])
+        self._h_wall.add(wall)
+        if self._tracer is not None:
+            for r in b.requests:
+                self._tracer.event(
+                    "complete", cat="lifecycle", lane="requests",
+                    ts=done, args={"rid": r.rid, "op": r.op,
+                                   "latency_s": done - r.t_submit})
         tags = [self._node_of_rid.get(r.rid) for r in b.requests]
         n_nodes = sum(1 for t in tags if t is not None)
         if n_nodes:
@@ -543,8 +652,10 @@ class HEServer:
         self.scheduler.reset_counters()
 
     def stats(self) -> dict:
+        st = self.engine.stage_timer
         return {
             **self.metrics.summary(),
+            **({"stages": st.summary()} if st is not None else {}),
             "cache": self.cache.stats(),
             "engine": {"steps_compiled": self.engine.n_compiled,
                        "compile_s": round(self.engine.compile_s, 3)},

@@ -102,6 +102,10 @@ class TableCache:
             if conj_key is not None else None
         self.hits = 0
         self.misses = 0
+        # repro.obs.Tracer (optional): cold level_tables misses emit
+        # "tables.level_slice" engine spans — the host-side build the
+        # scheduler's prefetch hides behind the in-flight batch.
+        self.tracer = None
         # encoded plaintext operands keyed by (message hash, logq) — the
         # ROADMAP "plaintext operand caching" follow-on: affine-layer
         # weights encode once, every later request references the hash.
@@ -126,11 +130,16 @@ class TableCache:
             self.hits += 1
             return self._levels[logq]
         self.misses += 1
+        span = self.tracer.span("tables.level_slice", cat="engine",
+                                lane="engine", args={"logq": logq}) \
+            if self.tracer is not None else None
         p = self.params
         K = p.qlimbs(logq)
         t1 = self._region_view(p.np_region1(logq), K)
         t2 = self._region_view(p.np_region2(logq), K)
         self._levels[logq] = (t1, t2)
+        if span is not None:
+            span.end()
         return t1, t2
 
     def has_level(self, logq: int) -> bool:

@@ -51,7 +51,9 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
              use_kernels: bool = False, max_age_s: float | None = None,
              overlap: bool = False, circuit: bool = False,
              schedule: bool = False, traced: int = 0,
-             check: str = "off", seed: int = 0) -> dict:
+             check: str = "off", seed: int = 0,
+             trace: str | None = None, profile_stages: bool = False,
+             metrics: str | None = None) -> dict:
     """Batched multi-level HE serving, driven through a `repro.client`
     HESession (the session owns keygen, encrypt/decrypt, and the
     HEServer; the raw per-op stream rides `session.server`).
@@ -69,12 +71,21 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     hits the server's (hash, level) cache. Drains the queue with padded
     batching and verifies every decrypted result. Returns the server
     stats dict plus a max_err field (printed by main).
+
+    Observability (repro.obs): `trace` writes a Chrome trace-event JSON
+    of the request lifecycle + engine spans to that path (load it in
+    Perfetto, or run `python -m repro.obs report PATH`);
+    `profile_stages` swaps stage-chain steps to the block-jitted eager
+    path (bitwise identical, slower) and prints the paper's Fig. 3
+    CRT/NTT/modmul/iCRT attribution; `metrics` dumps the registry
+    snapshot (serving telemetry plane) as JSON to that path.
     """
     from repro.client import HESession
     from repro.configs.heaan_mul import SMOKE
     from repro.core import heaan as H
     from repro.hserve import degree4_demo_circuit
     from repro.launch.mesh import make_host_mesh
+    from repro.obs import Tracer
 
     params = SMOKE
     requests = requests or 2 * batch + 1   # force >1 batch and padding
@@ -84,11 +95,13 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
         raise ValueError(f"--levels must be in [1, {params.L - 1}]")
     if not 0.0 <= plain_frac <= 1.0:
         raise ValueError("--plain-frac must be in [0, 1]")
+    tracer = Tracer() if trace else None
     session = HESession(params, seed=0,
                         mesh=make_host_mesh(model=model_shards),
                         batch=batch, use_kernels=use_kernels,
                         max_age_s=max_age_s, overlap=overlap,
-                        schedule=schedule)
+                        schedule=schedule, tracer=tracer,
+                        profile_stages=profile_stages)
     server = session.server
     if rotations:
         session.ensure_rotation_keys([1])
@@ -197,6 +210,12 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     stats = server.stats()
     stats["devices"] = len(jax.devices())
     stats["max_err"] = max(errs)
+    if trace:
+        stats["trace_events"] = tracer.write(trace)
+    if metrics:
+        import json
+        with open(metrics, "w") as f:
+            json.dump(server.registry.snapshot(), f, indent=2)
     return stats
 
 
@@ -262,6 +281,22 @@ def main():
                          "Pallas paths (interpret mode off-TPU)")
     ap.add_argument("--model-shards", type=int, default=1,
                     help="size of the model axis of the host mesh")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the request "
+                         "lifecycle (submit → enqueue → bucket-wait → "
+                         "flush → assemble → dispatch → device-wall → "
+                         "complete) + engine spans; open in Perfetto or "
+                         "run `python -m repro.obs report PATH`")
+    ap.add_argument("--profile-stages", action="store_true",
+                    help="attribute mul/rotate wall time to the paper's "
+                         "Fig. 3 stages (CRT/NTT/modmul/iCRT): stage-"
+                         "chain steps run as fenced block-jitted stages "
+                         "(bitwise identical, slower) and the per-stage "
+                         "split prints after the drain")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump the unified MetricsRegistry snapshot "
+                         "(serve/cache/scheduler/engine/client planes) "
+                         "as JSON after the drain")
     args = ap.parse_args()
 
     if args.he:
@@ -273,7 +308,10 @@ def main():
                          use_kernels=args.kernels,
                          max_age_s=args.max_age_s, overlap=args.overlap,
                          circuit=args.circuit, schedule=args.schedule,
-                         traced=args.traced, check=args.check)
+                         traced=args.traced, check=args.check,
+                         trace=args.trace,
+                         profile_stages=args.profile_stages,
+                         metrics=args.metrics)
         ops = ", ".join(
             f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
             f"(p50 {d['latency_ms']['p50']}ms, "
@@ -295,6 +333,20 @@ def main():
             print(f"  plaintext cache: {c['plain_hits']} hits / "
                   f"{c['plain_misses']} misses "
                   f"({c['plain_entries']} entries)")
+        if args.profile_stages:
+            for op, row in sorted(stats["stages"]["stages"].items()):
+                tot = sum(row.values())
+                wall = stats["per_op"].get(op, {}).get("wall_s", 0.0)
+                split = " ".join(
+                    f"{s} {1e3 * v:.1f}ms ({v / tot:.0%})"
+                    for s, v in row.items()) if tot else "—"
+                cov = f" coverage {tot / wall:.0%} of wall" if wall else ""
+                print(f"  fig3[{op}]: {split}{cov}")
+        if args.trace:
+            print(f"  trace: {stats['trace_events']} events -> "
+                  f"{args.trace}")
+        if args.metrics:
+            print(f"  metrics snapshot -> {args.metrics}")
         print(f"  max_err {stats['max_err']:.2e}")
         assert stats["max_err"] < 1e-2, "HE serving pipeline diverged"
         return

@@ -1,0 +1,120 @@
+"""Unified metrics plane: counters, gauges, bounded histograms, sources.
+
+One :class:`MetricsRegistry` per server process. Two publication
+styles, both snapshot into a single JSON document:
+
+  - **First-class instruments** — `counter(name)` / `gauge(name)` /
+    `histogram(name)` return live handles a component increments on its
+    own hot path. Histograms are :class:`~repro.obs.stats.Reservoir`
+    backed, so a registry never grows without bound.
+  - **Pull sources** — `add_source(name, fn)` registers a zero-arg
+    callable returning a dict; `snapshot()` calls it. This is how the
+    existing stats surfaces (ServeMetrics.summary, TableCache.stats,
+    CircuitScheduler.stats, HESession) publish without restructuring —
+    the registry pulls their current view instead of them pushing every
+    update.
+
+Naming scheme (docs/OBSERVABILITY.md): dotted lowercase,
+`<component>.<noun>[.<unit>]` — e.g. `serve.polls`, `serve.batch.wall_s`,
+`client.runs`. Source names are bare component names ("serve", "cache",
+"scheduler") and own a sub-document each.
+
+`snapshot()` output feeds three consumers: `serve --he --metrics PATH`,
+`runtime.monitor.Heartbeat(metrics=...)` payload embedding (the health
+channel the multi-host tier consumes), and the OBS_SCHEMA check in
+tools/check_docs.py.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.obs.stats import Reservoir
+
+__all__ = ["Counter", "Gauge", "MetricsRegistry"]
+
+
+class Counter:
+    """Monotonic count. `inc()` on the hot path, value in snapshots."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-set value (queue depth, inflight batches, ...)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, x: float) -> None:
+        self.value = float(x)
+
+
+class MetricsRegistry:
+    def __init__(self, histogram_capacity: int = 4096):
+        self._histogram_capacity = histogram_capacity
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Reservoir] = {}
+        self._sources: Dict[str, Callable[[], dict]] = {}
+
+    # ---- instruments ------------------------------------------------------
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str) -> Reservoir:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Reservoir(
+                capacity=self._histogram_capacity)
+        return h
+
+    # ---- pull sources -----------------------------------------------------
+
+    def add_source(self, name: str, fn: Callable[[], dict]) -> None:
+        """Register (or replace) a snapshot contributor. Replacement is
+        deliberate: `HEServer.reset_metrics` swaps in a fresh
+        ServeMetrics and re-registers it under the same name."""
+        self._sources[name] = fn
+
+    def remove_source(self, name: str) -> None:
+        self._sources.pop(name, None)
+
+    # ---- export -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """One JSON document: instruments + every source's current view.
+        A source that raises poisons health reporting exactly when it is
+        needed most, so failures are captured inline instead."""
+        out = {
+            "counters": {k: c.value
+                         for k, c in sorted(self._counters.items())},
+            "gauges": {k: g.value
+                       for k, g in sorted(self._gauges.items())},
+            "histograms": {k: h.summary()
+                           for k, h in sorted(self._histograms.items())},
+        }
+        for name, fn in sorted(self._sources.items()):
+            try:
+                out[name] = fn()
+            except Exception as e:          # noqa: BLE001 — see docstring
+                out[name] = {"error": f"{type(e).__name__}: {e}"}
+        return out

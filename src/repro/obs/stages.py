@@ -1,0 +1,149 @@
+"""Fig. 3 stage attribution: where does an HE op's wall time go?
+
+The paper's Fig. 3 buckets HE Mul wall time into CRT, NTT, modmul, and
+iCRT — the measurement every optimization in §IV follows from. Under
+jit those stages fuse into one XLA computation and no host-side clock
+can see them, so :class:`StageTimer` only runs on the engine's
+`--profile-stages` path, where steps execute eagerly and each stage is
+fenced with `jax.block_until_ready` before the clock reads. Stage math
+is unchanged either way — profiling is bitwise-identical to serving,
+just slower (the fence defeats async dispatch on purpose).
+
+Taxonomy mapping (the Fig. 3 attribution contract, see
+docs/OBSERVABILITY.md):
+
+  crt     — limbs → RNS residues (`_crt_b`)
+  ntt     — forward NTT *and* inverse NTT (`_ntt_b`, `_intt_b`; the
+            paper plots them as one transform bucket)
+  modmul  — every eval-domain pointwise product: region-1 Montgomery
+            muls and region-2 Shoup key products
+  icrt    — RNS residues → limbs (`_icrt_b`)
+
+Un-bucketed remainder (BigInt adds/shifts, automorphism permutes,
+placement) is the gap between the stage sum and the op's device wall —
+the acceptance gate requires the four buckets to cover ≥90% of mul.
+
+`region("region1"/"region2")` additionally attributes Fig. 2's two
+regions (ciphertext product vs key switch) per op.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from contextlib import contextmanager
+from typing import Callable, Dict, Optional
+
+__all__ = ["STAGES", "StageTimer"]
+
+STAGES = ("crt", "ntt", "modmul", "icrt")
+
+
+class StageTimer:
+    """Accumulate per-op per-stage wall seconds with device fencing.
+
+    tracer: optional :class:`repro.obs.trace.Tracer` — each timed call
+        also lands as a cat="stage" span on the "stage" lane.
+    clock: injectable for tests (defaults to perf_counter; stage spans
+        and the tracer should share one clock so the trace lines up).
+    """
+
+    def __init__(self, tracer=None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.tracer = tracer
+        self.clock = clock if clock is not None else time.perf_counter
+        self._stage_s: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {s: 0.0 for s in STAGES})
+        self._calls: Dict[str, Dict[str, int]] = defaultdict(
+            lambda: {s: 0 for s in STAGES})
+        self._region_s: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: defaultdict(float))
+        self._op: str = "?"
+        self._paused = 0
+
+    # ---- scoping ----------------------------------------------------------
+
+    @contextmanager
+    def op(self, label: str):
+        """Attribute nested timed() calls to this op kind ("mul", …)."""
+        prev, self._op = self._op, label
+        try:
+            yield
+        finally:
+            self._op = prev
+
+    @contextmanager
+    def pause(self):
+        """Suspend recording (warm-up/compile runs must not pollute the
+        steady-state attribution — `OpEngine.warm_batch` wraps its
+        throwaway run in this)."""
+        self._paused += 1
+        try:
+            yield
+        finally:
+            self._paused -= 1
+
+    # ---- recording --------------------------------------------------------
+
+    def timed(self, stage: str, thunk: Callable):
+        """Run thunk, fence its outputs on-device, book the elapsed wall
+        under (current op, stage). Returns the thunk's result."""
+        if self._paused:
+            return thunk()
+        if stage not in self._stage_s[self._op]:   # gone under python -O
+            raise ValueError(f"unknown stage {stage!r}; one of {STAGES}")
+        # deferred so importing repro.obs (e.g. from the jax-free
+        # frontend metrics path) never pulls in jax; cached after once
+        import jax
+        t0 = self.clock()
+        out = thunk()
+        jax.block_until_ready(out)
+        dt = self.clock() - t0
+        self._stage_s[self._op][stage] += dt
+        self._calls[self._op][stage] += 1
+        if self.tracer is not None:
+            self.tracer.event(stage, cat="stage", lane="stage", ts=t0,
+                              dur=dt, args={"op": self._op})
+        return out
+
+    @contextmanager
+    def region(self, name: str):
+        """Attribute a Fig. 2 region ("region1" ciphertext product /
+        "region2" key switch) for the current op. Region walls are
+        host-elapsed: the stages inside are fenced, so only trailing
+        un-bucketed work (BigInt shifts) dispatches past the exit."""
+        if self._paused:
+            yield
+            return
+        t0 = self.clock()
+        try:
+            yield
+        finally:
+            dt = self.clock() - t0
+            self._region_s[self._op][name] += dt
+            if self.tracer is not None:
+                self.tracer.event(name, cat="stage", lane="stage", ts=t0,
+                                  dur=dt, args={"op": self._op})
+
+    # ---- export -----------------------------------------------------------
+
+    def stage_total(self, op: str) -> float:
+        """Sum of the four Fig. 3 buckets for one op kind — the
+        numerator of the ≥90%-of-device-wall coverage gate."""
+        return sum(self._stage_s[op].values()) if op in self._stage_s \
+            else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "stages": {op: {s: v[s] for s in STAGES}
+                       for op, v in sorted(self._stage_s.items())},
+            "calls": {op: {s: v[s] for s in STAGES}
+                      for op, v in sorted(self._calls.items())},
+            "regions": {op: dict(v)
+                        for op, v in sorted(self._region_s.items())},
+        }
+
+    def reset(self) -> None:
+        self._stage_s.clear()
+        self._calls.clear()
+        self._region_s.clear()

@@ -22,14 +22,35 @@ from typing import Optional
 
 
 class StepMonitor:
+    """EMA step-time SLA with breach-streak re-anchoring.
+
+    The EMA deliberately freezes during a breach (a straggler must not
+    drag the baseline up, or the alert stops firing exactly when the
+    degradation persists). But a PERMANENT degradation — the pod now
+    just runs at 2.5× — would then breach forever, burying real alerts
+    in noise. After `reanchor_after` CONSECUTIVE breaches the monitor
+    concedes the new normal and re-anchors the baseline to the streak's
+    minimum step time, capped at `reanchor_cap × EMA` so one re-anchor
+    can never absorb an unbounded regression in a single jump (a 100×
+    degradation re-baselines in capped stages, each logged). Re-anchors
+    are recorded in `reanchors` — the degrade event the launcher's
+    policy escalates on even once the alerts quiesce.
+    """
+
     def __init__(self, ema_alpha: float = 0.1, slack: float = 2.0,
-                 warmup_steps: int = 3):
+                 warmup_steps: int = 3, reanchor_after: int = 8,
+                 reanchor_cap: float = 4.0):
         self.alpha = ema_alpha
         self.slack = slack
         self.warmup = warmup_steps
+        self.reanchor_after = reanchor_after
+        self.reanchor_cap = reanchor_cap
         self.ema: Optional[float] = None
         self.count = 0
         self.breaches = []
+        self.reanchors = []          # (step, old_ema, new_ema)
+        self._streak = 0
+        self._streak_min = float("inf")
 
     def record(self, step: int, seconds: float) -> bool:
         """Returns True if this step breached the SLA (straggler signal)."""
@@ -43,15 +64,39 @@ class StepMonitor:
         breach = seconds > self.slack * self.ema
         if breach:
             self.breaches.append((step, seconds, self.ema))
+            self._streak += 1
+            self._streak_min = min(self._streak_min, seconds)
+            if self._streak >= self.reanchor_after:
+                # concede the new normal: anchor to the best the streak
+                # ever did (not its mean — a recovering pod should not
+                # inherit its worst steps), capped so one jump is
+                # bounded
+                new = min(self._streak_min, self.reanchor_cap * self.ema)
+                self.reanchors.append((step, self.ema, new))
+                self.ema = new
+                self._streak = 0
+                self._streak_min = float("inf")
         else:
             self.ema = (1 - self.alpha) * self.ema + self.alpha * seconds
+            self._streak = 0
+            self._streak_min = float("inf")
         return breach
 
 
 class Heartbeat:
-    def __init__(self, path: str, interval: float = 10.0):
+    """Watchdog file with an optional live-telemetry payload.
+
+    `metrics` duck-types `repro.obs.MetricsRegistry` (anything with a
+    `snapshot() -> dict`): each beat embeds the current snapshot under
+    a "metrics" key, so the supervisor reading the heartbeat for
+    liveness gets the serving telemetry plane for free — the health
+    channel the ROADMAP's multi-host tier consumes.
+    """
+
+    def __init__(self, path: str, interval: float = 10.0, metrics=None):
         self.path = path
         self.interval = interval
+        self.metrics = metrics
         self._last = 0.0
 
     def beat(self, step: int, payload: Optional[dict] = None) -> None:
@@ -59,9 +104,12 @@ class Heartbeat:
         if now - self._last < self.interval:
             return
         self._last = now
+        doc = {"step": step, "time": now, **(payload or {})}
+        if self.metrics is not None:
+            doc["metrics"] = self.metrics.snapshot()
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": step, "time": now, **(payload or {})}, f)
+            json.dump(doc, f)
         os.replace(tmp, self.path)
 
     @staticmethod

@@ -9,11 +9,20 @@ test install finishes, and the driver repo bans new deps):
      skipped; intra-file `#fragment` links are skipped).
   2. BENCH_serve_he.json must match the schema documented in
      docs/SERVING.md — required keys with the right JSON types, including
-     the `trickle` and `overlap` blocks this PR's benchmark emits.
+     the `trickle` and `overlap` blocks this PR's benchmark emits. The
+     `obs` block additionally GATES: tracing overhead ≤ 2% and
+     bitwise-identical results (always-on tracing must be free).
+
+With `--trace` / `--metrics`, the repro.obs artifacts a serve run wrote
+are validated instead: every Chrome trace event carries the full
+pid/tid/ts/dur/name/cat key set and all eight request-lifecycle phases
+appear; the metrics snapshot has the registry's documented shape
+(docs/OBSERVABILITY.md).
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 
     python tools/check_docs.py [--repo PATH]
+    python tools/check_docs.py --trace trace.json --metrics metrics.json
 """
 
 from __future__ import annotations
@@ -54,6 +63,7 @@ BENCH_SCHEMA = {
     "scheduler": dict,
     "client": dict,
     "analysis": dict,
+    "obs": dict,
 }
 PARAMS_KEYS = ("logN", "logQ", "logp", "beta_bits")
 TRICKLE_SCHEMA = {"requests": int, "max_age_s": NUM, "p50_ms": NUM,
@@ -84,6 +94,17 @@ ANALYSIS_SCHEMA = {"circuits": int, "calibrated_from": str,
 ANALYSIS_PHASE_SCHEMA = {"drain_s": NUM, "batches": int,
                          "mul_pad_frac": NUM, "deferrals": int,
                          "cost_skips": int}
+# the repro.obs tracing-overhead A/B; overhead_frac is GATED ≤ this
+OBS_SCHEMA = {"muls": int, "off_drain_s": NUM, "on_drain_s": NUM,
+              "overhead_frac": NUM, "trace_events": int,
+              "bitwise_identical": bool}
+OBS_MAX_OVERHEAD = 0.02
+# every complete ("X") trace event must carry the full key set or the
+# Chrome/Perfetto importers mis-render the lane
+TRACE_EVENT_KEYS = ("pid", "tid", "ts", "dur", "name", "cat")
+LIFECYCLE_PHASES = ("submit", "enqueue", "bucket_wait", "flush",
+                    "batch_assemble", "dispatch", "device_wall",
+                    "complete")
 
 
 def check_links(repo: Path) -> list:
@@ -173,6 +194,76 @@ def check_bench(bench: Path) -> list:
         if an.get("bitwise_identical") is False:
             errors.append(f"{bench.name}.analysis: cost-model scheduling "
                           "changed a result bit (bitwise_identical false)")
+    if isinstance(obj.get("obs"), dict):
+        ob = obj["obs"]
+        errors += _check_block(ob, OBS_SCHEMA, f"{bench.name}.obs")
+        if ob.get("bitwise_identical") is False:
+            errors.append(f"{bench.name}.obs: tracing changed a result "
+                          "bit (bitwise_identical false)")
+        frac = ob.get("overhead_frac")
+        if isinstance(frac, NUM) and not isinstance(frac, bool) \
+                and frac > OBS_MAX_OVERHEAD:
+            errors.append(
+                f"{bench.name}.obs: tracing overhead {frac:.1%} exceeds "
+                f"the {OBS_MAX_OVERHEAD:.0%} gate — the lifecycle "
+                "tracer must stay cheap enough to leave on")
+    return errors
+
+
+def check_trace(path: Path) -> list:
+    """Validate a Chrome trace-event JSON written by `serve --he
+    --trace`: well-formed, full key set on every complete event, and
+    every request-lifecycle phase represented."""
+    if not path.exists():
+        return [f"{path.name}: file missing"]
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path.name}: invalid JSON ({e})"]
+    events = doc.get("traceEvents") if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        return [f"{path.name}: no traceEvents array"]
+    errors = []
+    names = set()
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            errors.append(f"{path.name}[{i}]: event is not an object")
+            continue
+        if e.get("ph") not in ("X", "M"):
+            errors.append(f"{path.name}[{i}]: unexpected phase "
+                          f"{e.get('ph')!r} (emitter writes only "
+                          "complete 'X' and metadata 'M' events)")
+        missing = [k for k in TRACE_EVENT_KEYS if k not in e]
+        if missing:
+            errors.append(f"{path.name}[{i}] ({e.get('name')!r}): "
+                          f"missing {missing}")
+        if e.get("ph") == "X":
+            names.add(e.get("name"))
+    absent = [p for p in LIFECYCLE_PHASES if p not in names]
+    if absent:
+        errors.append(f"{path.name}: lifecycle phases never recorded: "
+                      f"{absent} (found {sorted(names)})")
+    return errors
+
+
+def check_metrics(path: Path) -> list:
+    """Validate a MetricsRegistry snapshot written by `serve --he
+    --metrics`: instrument sections plus the serve source, and no
+    source captured an exception."""
+    if not path.exists():
+        return [f"{path.name}: file missing"]
+    try:
+        obj = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path.name}: invalid JSON ({e})"]
+    errors = _check_block(obj, {"counters": dict, "gauges": dict,
+                                "histograms": dict, "serve": dict},
+                          path.name)
+    for name, sub in obj.items():
+        if isinstance(sub, dict) and "error" in sub \
+                and set(sub) == {"error"}:
+            errors.append(f"{path.name}.{name}: source raised at "
+                          f"snapshot time: {sub['error']}")
     return errors
 
 
@@ -185,8 +276,23 @@ def main(argv=None) -> int:
                          "committed BENCH_serve_he.json (and skip the "
                          "link check) — CI schema-drift gate for freshly "
                          "emitted files")
+    ap.add_argument("--trace", default=None, type=Path,
+                    help="validate a Chrome trace-event JSON written by "
+                         "`serve --he --trace` (full event key set + "
+                         "all lifecycle phases); skips the link/bench "
+                         "checks")
+    ap.add_argument("--metrics", default=None, type=Path,
+                    help="validate a MetricsRegistry snapshot written "
+                         "by `serve --he --metrics`; skips the "
+                         "link/bench checks")
     args = ap.parse_args(argv)
-    if args.bench is not None:
+    if args.trace is not None or args.metrics is not None:
+        errors = []
+        if args.trace is not None:
+            errors += check_trace(args.trace)
+        if args.metrics is not None:
+            errors += check_metrics(args.metrics)
+    elif args.bench is not None:
         errors = check_bench(args.bench)
     else:
         errors = check_links(args.repo) \
@@ -194,8 +300,7 @@ def main(argv=None) -> int:
     for e in errors:
         print(e)
     if not errors:
-        print("docs OK: links resolve, bench JSON matches the "
-              "documented schema")
+        print("docs OK: checked artifacts match the documented schema")
     return 1 if errors else 0
 
 
