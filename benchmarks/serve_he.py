@@ -343,6 +343,83 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
     assert obs_bitwise, "tracing changed a result bit"
     obs_off_s, obs_on_s = min(off_walls), min(on_walls)
 
+    # ---- multihost: frontend/worker scaling + worker-death requeue ------
+    # the same mul stream served through the disaggregated tier
+    # (HEFrontend routing batches to W in-process worker engines) for
+    # W in 1/2/4. All workers share this host's devices, so wall time
+    # cannot scale here; the scaling signal is VIRTUAL time — each
+    # worker's busy_s is the device-seconds it actually computed, and
+    # makespan_W = max_w busy_s models W hosts running concurrently.
+    # efficiency(W) = busy_total(1) / (W · makespan_W): 1.0 is perfect
+    # load balance, < 0.7 at W=4 fails the check_docs gate. A second
+    # pass kills one worker mid-batch via the FailureInjector and
+    # verifies the requeue path re-serves bitwise identically.
+    from repro.hserve import HEFrontend
+    from repro.runtime.failures import FailureInjector
+
+    mh_muls = 8 * batch
+
+    def mh_submit(srv):
+        rids = []
+        for i in range(mh_muls):
+            cs = by_level[logqs[i % levels]]
+            rids.append(srv.submit_mul(cs[i % len(cs)],
+                                       cs[(i + 1) % len(cs)]))
+        return rids
+
+    ref_rids = mh_submit(server)
+    ref_res = server.drain()
+    ref_outs = [ref_res[r] for r in ref_rids]
+
+    def mh_bitwise_vs_ref(rids, res):
+        return all(
+            bool((np.asarray(a.ax) == np.asarray(res[r].ax)).all()
+                 and (np.asarray(a.bx) == np.asarray(res[r].bx)).all())
+            for a, r in zip(ref_outs, rids))
+
+    mesh = make_host_mesh(model=model_shards)
+    per_workers = {}
+    mh_bitwise = True
+    for W in (1, 2, 4):
+        fe = HEFrontend(params, evk, mesh=mesh, batch=batch, workers=W)
+        # warm every worker on every (mul, level) signature (W batches
+        # per level spread over the W idle workers), then zero busy_s —
+        # the measured sweep is steady state, like the monolith's
+        for lq in logqs:
+            cs = by_level[lq]
+            for i in range(W * batch):
+                fe.submit_mul(cs[i % len(cs)], cs[(i + 1) % len(cs)])
+        fe.drain()
+        fe.reset_metrics()
+        rids = mh_submit(fe)
+        res = fe.drain()
+        mh_bitwise &= mh_bitwise_vs_ref(rids, res)
+        busy = [w.busy_s for w in fe.workers]
+        makespan = max(busy)
+        per_workers[str(W)] = {
+            "busy_s": round(sum(busy), 4),
+            "makespan_s": round(makespan, 4),
+            "mul_per_s": round(mh_muls / makespan, 3) if makespan else 0.0,
+        }
+        fe.close()
+    assert mh_bitwise, "multi-host serving changed a result bit"
+    busy_1 = per_workers["1"]["busy_s"]
+    mh_eff4 = round(busy_1 / (4 * per_workers["4"]["makespan_s"]), 3) \
+        if per_workers["4"]["makespan_s"] else 0.0
+
+    # requeue A/B: worker 0 dies right after its second dispatch (the
+    # batch is computed but never delivered); the frontend must detect
+    # the death, requeue the in-flight requests, and re-serve them on
+    # the surviving worker — bitwise identically
+    fe = HEFrontend(params, evk, mesh=mesh, batch=batch, workers=2,
+                    injector=FailureInjector(kill_worker_at={0: 2}))
+    rids = mh_submit(fe)
+    res = fe.drain()
+    rq_bitwise = mh_bitwise_vs_ref(rids, res)
+    assert rq_bitwise, "worker-death requeue changed a result bit"
+    fr = fe.stats()["frontend"]
+    fe.close()
+
     # ---- trickle: arrival rate < batch; only the age policy flushes.
     # adaptive_target is disabled here on purpose: with it on, a trickle
     # is released the moment the target shrinks to the arrival rate and
@@ -440,6 +517,20 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
             "overhead_frac": round(obs_on_s / obs_off_s - 1.0, 4),
             "trace_events": trace_events,
             "bitwise_identical": obs_bitwise,
+        },
+        "multihost": {
+            "muls": mh_muls,
+            "batch": batch,
+            "transport": "inproc",
+            "workers_swept": [1, 2, 4],
+            "per_workers": per_workers,
+            "scaling_efficiency_at_4": mh_eff4,
+            "requeue": {
+                "worker_deaths": fr["deaths"],
+                "requeued_requests": fr["requeued_requests"],
+                "bitwise_identical": rq_bitwise,
+            },
+            "bitwise_identical": mh_bitwise,
         },
     }
 

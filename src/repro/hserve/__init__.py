@@ -36,6 +36,13 @@ levels (§III-A). `repro.hserve` is that design in JAX/GSPMD, layered on
     age-based continuous batching (`max_age_s`), adaptive bucket
     targets, double-buffered pipelining (`overlap`), and
     `submit_circuit` for whole-circuit server-side evaluation.
+  - :mod:`repro.hserve.frontend` / :mod:`repro.hserve.worker` /
+    :mod:`repro.hserve.transport` — the multi-host disaggregated tier:
+    :class:`HEFrontend` keeps the queue/scheduler/plain-cache half and
+    routes batches by (op, level) affinity over pickle-free frames to N
+    :class:`WorkerEngine` processes (each with its own mesh, TableCache,
+    and compiled steps), with heartbeat health, worker-death requeue,
+    and bitwise identity to single-server serving (docs/SERVING.md).
 
 Usage — serve a degree-4 encrypted polynomial in one round trip::
 
@@ -91,14 +98,24 @@ from repro.hserve.metrics import ServeMetrics  # noqa: F401
 from repro.hserve.queue import (  # noqa: F401
     Batch, BatchAssembler, Request, RequestQueue,
 )
+from repro.hserve.frontend import (  # noqa: F401
+    FrontendCatalog, HEFrontend, NoLiveWorkersError,
+)
 from repro.hserve.scheduler import CircuitScheduler  # noqa: F401
 from repro.hserve.server import HEServer  # noqa: F401
-from repro.hserve.tables import TableCache  # noqa: F401
+from repro.hserve.tables import PlainCache, TableCache  # noqa: F401
+from repro.hserve.transport import (  # noqa: F401
+    InProcTransport, SubprocessTransport, WorkerDied,
+)
+from repro.hserve.worker import WorkerEngine  # noqa: F401
 
 __all__ = [
-    "HEServer", "OpEngine", "TableCache", "ServeMetrics",
+    "HEServer", "OpEngine", "TableCache", "PlainCache", "ServeMetrics",
     "Request", "Batch", "RequestQueue", "BatchAssembler",
     "CircuitOp", "validate_circuit", "circuit_schedule",
     "degree4_demo_circuit", "Inflight", "CircuitScheduler",
     "slot_sum_rotations",
+    "HEFrontend", "FrontendCatalog", "NoLiveWorkersError",
+    "WorkerEngine", "InProcTransport", "SubprocessTransport",
+    "WorkerDied",
 ]

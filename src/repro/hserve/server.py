@@ -174,6 +174,35 @@ class HEServer:
         if mesh is None:
             from repro.launch.mesh import make_host_mesh
             mesh = make_host_mesh()
+        self.cache = TableCache(params, evk, rot_keys, conj_key,
+                                plain_cache_mib=plain_cache_mib)
+        self.engine = OpEngine(params, mesh, self.cache,
+                               use_kernels=use_kernels, tracer=tracer,
+                               profile_stages=profile_stages,
+                               **engine_knobs)
+        self._init_core(params, mesh=mesh, batch=batch,
+                        max_age_s=max_age_s,
+                        adaptive_target=adaptive_target, overlap=overlap,
+                        schedule=schedule, lookahead=lookahead,
+                        cost_model=cost_model, prefetch=prefetch,
+                        clock=clock, tracer=tracer, registry=registry)
+        self.registry.add_source("cache", self.cache.stats)
+        self.registry.add_source(
+            "engine", lambda: {"steps_compiled": self.engine.n_compiled,
+                               "compile_s": round(self.engine.compile_s,
+                                                  3)})
+
+    def _init_core(self, params: HEParams, *, mesh, batch: int,
+                   max_age_s: Optional[float], adaptive_target: bool,
+                   overlap: bool, schedule: bool, lookahead: int,
+                   cost_model, prefetch: bool,
+                   clock: Callable[[], float], tracer, registry) -> None:
+        """The engine-free serving core: queue + scheduler + circuit
+        state + metrics plane. Shared verbatim by the monolithic server
+        (which adds a local TableCache/OpEngine) and the multi-host
+        frontend (`repro.hserve.frontend.HEFrontend`, which routes
+        batches to worker engines instead). Expects `self.cache` to be
+        set already (a TableCache or the frontend's key catalog)."""
         self.params = params
         self.mesh = mesh
         self.batch = batch
@@ -183,12 +212,6 @@ class HEServer:
         self.schedule = schedule
         self.prefetch = prefetch
         self._clock = clock
-        self.cache = TableCache(params, evk, rot_keys, conj_key,
-                                plain_cache_mib=plain_cache_mib)
-        self.engine = OpEngine(params, mesh, self.cache,
-                               use_kernels=use_kernels, tracer=tracer,
-                               profile_stages=profile_stages,
-                               **engine_knobs)
         self.queue = RequestQueue(clock=clock)
         self.assembler = BatchAssembler(batch)
         self.metrics = ServeMetrics()
@@ -208,12 +231,7 @@ class HEServer:
         self.registry = registry if registry is not None \
             else MetricsRegistry()
         self.registry.add_source("serve", lambda: self.metrics.summary())
-        self.registry.add_source("cache", self.cache.stats)
         self.registry.add_source("scheduler", self.scheduler.stats)
-        self.registry.add_source(
-            "engine", lambda: {"steps_compiled": self.engine.n_compiled,
-                               "compile_s": round(self.engine.compile_s,
-                                                  3)})
         self._c_polls = self.registry.counter("serve.polls")
         self._c_batches = self.registry.counter("serve.batches")
         self._c_requests = self.registry.counter("serve.requests")
@@ -229,7 +247,8 @@ class HEServer:
         """Re-point the trace sink everywhere at once (engine + table
         cache + the profile-mode stage timer follow the server's)."""
         self._tracer = t
-        self.engine.tracer = t
+        if self.engine is not None:
+            self.engine.tracer = t
         self.cache.tracer = t
 
     # ---- request intake --------------------------------------------------
@@ -494,6 +513,33 @@ class HEServer:
         self._g_depth.set(self.queue.depth)
         self.metrics.record_depth(self.queue.depth)
         now = self._clock()
+        key, cause = self._choose_flush(flush, now)
+        if key is None:
+            return self._retire(self._take_inflight())
+        b = self._pop_assemble(key, cause)
+        if self.overlap:
+            prev = self._take_inflight()
+            self._inflight = self._dispatch(b)
+            self._prefetch_next(b)            # rides the in-flight step
+            return self._retire(prev)
+        inf = self._dispatch(b)
+        if self.engine.profile_stages:
+            # profiling dispatch is synchronous (fenced stage blocks):
+            # there is no in-flight step to hide the prefetch behind,
+            # and running it before wait() would book its host-side
+            # table-build time into this batch's device wall — sinking
+            # the Fig. 3 stage-coverage attribution.
+            outs, wall = self.engine.wait(inf)
+            self._prefetch_next(b)
+            return self._complete(b, outs, wall)
+        self._prefetch_next(b)                # host work while b runs
+        outs, wall = self.engine.wait(inf)
+        return self._complete(b, outs, wall)
+
+    def _choose_flush(self, flush: bool, now: float
+                      ) -> Tuple[Optional[Tuple], str]:
+        """The flush policy: (bucket key, cause) per full → age → drain
+        precedence, or (None, ...) when nothing should release."""
         key, cause = self.queue.ready_key(self._bucket_target(now)), "full"
         if key is None and self.max_age_s is not None:
             key, cause = self.queue.expired_key(self.max_age_s, now), "age"
@@ -501,8 +547,12 @@ class HEServer:
             key = (self.scheduler.drain_key(self.queue, self.batch)
                    if self.schedule else self.queue.any_key())
             cause = "drain"
-        if key is None:
-            return self._retire(self._take_inflight())
+        return key, cause
+
+    def _pop_assemble(self, key: Tuple, cause: str) -> Batch:
+        """Pop one bucket and assemble the fixed-shape batch, with the
+        bucket_wait / flush / batch_assemble lifecycle tracing and flush
+        accounting."""
         reqs = self.queue.pop_bucket(key, self.batch)
         tr = self._tracer
         if tr is not None:
@@ -522,24 +572,12 @@ class HEServer:
             b = self.assembler.assemble(reqs)
         self.metrics.record_flush(cause)
         self._c_batches.inc()
-        if self.overlap:
-            prev = self._take_inflight()
-            self._inflight = self._dispatch(b)
-            self._prefetch_next(b)            # rides the in-flight step
-            return self._retire(prev)
-        inf = self._dispatch(b)
-        if self.engine.profile_stages:
-            # profiling dispatch is synchronous (fenced stage blocks):
-            # there is no in-flight step to hide the prefetch behind,
-            # and running it before wait() would book its host-side
-            # table-build time into this batch's device wall — sinking
-            # the Fig. 3 stage-coverage attribution.
-            outs, wall = self.engine.wait(inf)
-            self._prefetch_next(b)
-            return self._complete(b, outs, wall)
-        self._prefetch_next(b)                # host work while b runs
-        outs, wall = self.engine.wait(inf)
-        return self._complete(b, outs, wall)
+        return b
+
+    def _work_pending(self) -> bool:
+        """Is anything dispatched but not yet completed? (The frontend
+        overrides this with its per-worker in-flight view.)"""
+        return self._inflight is not None
 
     def _dispatch(self, b: Batch) -> Inflight:
         """engine.dispatch under a "dispatch" lifecycle span (place +
@@ -620,13 +658,13 @@ class HEServer:
         a circuit nevertheless ends up with no node queued or in flight,
         its ready nodes are re-armed once before giving up."""
         results: Dict[int, Ciphertext] = {}
-        while (self.queue.depth or self._inflight is not None
+        while (self.queue.depth or self._work_pending()
                or self._circuits):
             served = self.poll(flush=True)
             for rid, ct in served:
                 results[rid] = ct
             if (not served and not self.queue.depth
-                    and self._inflight is None):
+                    and not self._work_pending()):
                 if self._circuits:
                     # defensive self-heal: re-run readiness over the
                     # stragglers; anything enqueued keeps the loop alive

@@ -51,7 +51,86 @@ from repro.core.context import build_global_tables, build_icrt_tables
 from repro.core.params import HEParams
 from repro.dist.he_pipeline import evk_tables
 
-__all__ = ["TableCache"]
+__all__ = ["PlainCache", "TableCache"]
+
+
+class PlainCache:
+    """LRU cache of encoded plaintext operands keyed by (hash, logq).
+
+    Extracted from TableCache so the multi-host frontend — which owns
+    the plain-operand cache but NO device tables (those live in the
+    workers) — can hold one without materializing a table set. The
+    ROADMAP "plaintext operand caching" story: affine-layer weights
+    encode once, every later request references the hash.
+    LRU-bounded (cap_mib; None = unbounded): a server fed per-request
+    one-shot operands must not grow without limit.
+    """
+
+    def __init__(self, cap_mib: Optional[float] = 256.0):
+        self._plain: "OrderedDict[Tuple[str, int], np.ndarray]" = \
+            OrderedDict()
+        self._cap = None if cap_mib is None else int(cap_mib * 2**20)
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def put(self, h: str, logq: int, pt) -> np.ndarray:
+        """Cache an encoded operand under (hash, logq); returns the
+        resident copy. An existing entry wins (and counts a hit — the
+        client re-sent an operand the server already held). The resident
+        array is marked read-only, so the request queue can alias it
+        instead of re-copying the (N, qlimbs) buffer on every submit
+        that resolves from the cache."""
+        key = (h, int(logq))
+        if key in self._plain:
+            self.hits += 1
+            self._plain.move_to_end(key)
+        else:
+            self.misses += 1
+            if isinstance(pt, np.ndarray) and not pt.flags.writeable \
+                    and pt.base is None:
+                arr = pt       # adopt an owned immutable buffer as-is
+            else:              # (base check: a read-only VIEW can have
+                arr = np.array(pt)            # a writeable base)
+                arr.setflags(write=False)
+            self._plain[key] = arr
+            self._bytes += arr.nbytes
+            # LRU eviction (never the entry just inserted). In-flight
+            # circuits resolved their arrays at submit and keep their
+            # own references, so eviction cannot break queued work —
+            # only a LATER hash-only reference to an evicted key fails
+            # (and re-registering it is always legal).
+            while self._cap is not None and len(self._plain) > 1 \
+                    and self._bytes > self._cap:
+                _, old = self._plain.popitem(last=False)
+                self._bytes -= old.nbytes
+                self.evictions += 1
+        return self._plain[key]
+
+    def get(self, h: str, logq: int) -> np.ndarray:
+        """The cached encoded operand for (hash, logq); KeyError (before
+        anything is enqueued) when the client references a hash the
+        server never saw at this level."""
+        key = (h, int(logq))
+        if key not in self._plain:
+            raise KeyError(
+                f"no cached plaintext for hash {h!r} at logq={logq}; "
+                f"send the encoded operand once (pt=..., pt_hash=...) "
+                f"before referencing it by hash alone")
+        self.hits += 1
+        self._plain.move_to_end(key)
+        return self._plain[key]
+
+    def has(self, h: str, logq: int) -> bool:
+        return (h, int(logq)) in self._plain
+
+    def __len__(self) -> int:
+        return len(self._plain)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
 
 # Resident (prime-pool) entries: rows slice by np; crt rows also slice
 # their limb column by the level's qlimbs.
@@ -106,19 +185,10 @@ class TableCache:
         # "tables.level_slice" engine spans — the host-side build the
         # scheduler's prefetch hides behind the in-flight batch.
         self.tracer = None
-        # encoded plaintext operands keyed by (message hash, logq) — the
-        # ROADMAP "plaintext operand caching" follow-on: affine-layer
-        # weights encode once, every later request references the hash.
-        # LRU-bounded (plain_cache_mib; None = unbounded): a server fed
-        # per-request one-shot operands must not grow without limit.
-        self._plain: "OrderedDict[Tuple[str, int], np.ndarray]" = \
-            OrderedDict()
-        self._plain_cap = None if plain_cache_mib is None \
-            else int(plain_cache_mib * 2**20)
-        self._plain_bytes = 0
-        self.plain_hits = 0
-        self.plain_misses = 0
-        self.plain_evictions = 0
+        # encoded plaintext operands keyed by (message hash, logq) —
+        # see PlainCache (extracted so the multi-host frontend can own
+        # one without any device tables)
+        self.plain = PlainCache(cap_mib=plain_cache_mib)
 
     # ---- per-level region tables ----------------------------------------
 
@@ -164,56 +234,31 @@ class TableCache:
     # ---- plaintext operands ----------------------------------------------
 
     def put_plain(self, h: str, logq: int, pt) -> np.ndarray:
-        """Cache an encoded plaintext operand under (hash, logq); returns
-        the resident copy. An existing entry wins (and counts a hit —
-        the client re-sent an operand the server already held). The
-        resident array is marked read-only, so the request queue can
-        alias it instead of re-copying the (N, qlimbs) buffer on every
-        submit that resolves from the cache."""
-        key = (h, int(logq))
-        if key in self._plain:
-            self.plain_hits += 1
-            self._plain.move_to_end(key)
-        else:
-            self.plain_misses += 1
-            if isinstance(pt, np.ndarray) and not pt.flags.writeable \
-                    and pt.base is None:
-                arr = pt       # adopt an owned immutable buffer as-is
-            else:              # (base check: a read-only VIEW can have
-                arr = np.array(pt)            # a writeable base)
-                arr.setflags(write=False)
-            self._plain[key] = arr
-            self._plain_bytes += arr.nbytes
-            # LRU eviction (never the entry just inserted). In-flight
-            # circuits resolved their arrays at submit and keep their
-            # own references, so eviction cannot break queued work —
-            # only a LATER hash-only reference to an evicted key fails
-            # (and re-registering it is always legal).
-            while self._plain_cap is not None and len(self._plain) > 1 \
-                    and self._plain_bytes > self._plain_cap:
-                _, old = self._plain.popitem(last=False)
-                self._plain_bytes -= old.nbytes
-                self.plain_evictions += 1
-        return self._plain[key]
+        """Cache an encoded plaintext operand under (hash, logq); see
+        :meth:`PlainCache.put`."""
+        return self.plain.put(h, logq, pt)
 
     def get_plain(self, h: str, logq: int) -> np.ndarray:
-        """The cached encoded operand for (hash, logq); KeyError (before
-        anything is enqueued) when the client references a hash the
-        server never saw at this level."""
-        key = (h, int(logq))
-        if key not in self._plain:
-            raise KeyError(
-                f"no cached plaintext for hash {h!r} at logq={logq}; "
-                f"send the encoded operand once (pt=..., pt_hash=...) "
-                f"before referencing it by hash alone")
-        self.plain_hits += 1
-        self._plain.move_to_end(key)
-        return self._plain[key]
+        """The cached encoded operand for (hash, logq); see
+        :meth:`PlainCache.get`."""
+        return self.plain.get(h, logq)
 
     def has_plain(self, h: str, logq: int) -> bool:
         """Whether (hash, logq) is cached — `repro.client`'s compile pass
         asks this to skip the client-side encode entirely on reuse."""
-        return (h, int(logq)) in self._plain
+        return self.plain.has(h, logq)
+
+    @property
+    def plain_hits(self) -> int:
+        return self.plain.hits
+
+    @property
+    def plain_misses(self) -> int:
+        return self.plain.misses
+
+    @property
+    def plain_evictions(self) -> int:
+        return self.plain.evictions
 
     # ---- keys ------------------------------------------------------------
 
@@ -262,7 +307,6 @@ class TableCache:
                     for d in ([self._ek] if self._ek else [])
                     + ([self._conj] if self._conj else [])
                     + list(self._rot.values()) for v in d.values())
-        plain_b = self._plain_bytes
         return {
             "levels_materialized": sorted(self._levels),
             "np_sets": sorted(self._icrt_dev),
@@ -270,12 +314,12 @@ class TableCache:
             "conj_key": self.has_conj_key,
             "hits": self.hits,
             "misses": self.misses,
-            "plain_entries": len(self._plain),
-            "plain_hits": self.plain_hits,
-            "plain_misses": self.plain_misses,
-            "plain_evictions": self.plain_evictions,
+            "plain_entries": len(self.plain),
+            "plain_hits": self.plain.hits,
+            "plain_misses": self.plain.misses,
+            "plain_evictions": self.plain.evictions,
             "resident_mib": round(res_b / 2**20, 3),
             "icrt_mib": round(icrt_b / 2**20, 3),
             "keys_mib": round(key_b / 2**20, 3),
-            "plain_mib": round(plain_b / 2**20, 3),
+            "plain_mib": round(self.plain.nbytes / 2**20, 3),
         }

@@ -53,7 +53,7 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
              schedule: bool = False, traced: int = 0,
              check: str = "off", seed: int = 0,
              trace: str | None = None, profile_stages: bool = False,
-             metrics: str | None = None) -> dict:
+             metrics: str | None = None, workers: int = 0) -> dict:
     """Batched multi-level HE serving, driven through a `repro.client`
     HESession (the session owns keygen, encrypt/decrypt, and the
     HEServer; the raw per-op stream rides `session.server`).
@@ -79,11 +79,17 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     path (bitwise identical, slower) and prints the paper's Fig. 3
     CRT/NTT/modmul/iCRT attribution; `metrics` dumps the registry
     snapshot (serving telemetry plane) as JSON to that path.
+
+    `workers` > 0 serves the same stream through the multi-host tier:
+    an :class:`repro.hserve.HEFrontend` routing batches to that many
+    in-process worker engines (docs/SERVING.md "Multi-host serving").
+    Bitwise identical to the single-server path.
     """
     from repro.client import HESession
     from repro.configs.heaan_mul import SMOKE
     from repro.core import heaan as H
-    from repro.hserve import degree4_demo_circuit
+    from repro.core.keys import keygen
+    from repro.hserve import HEFrontend, degree4_demo_circuit
     from repro.launch.mesh import make_host_mesh
     from repro.obs import Tracer
 
@@ -96,12 +102,26 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     if not 0.0 <= plain_frac <= 1.0:
         raise ValueError("--plain-frac must be in [0, 1]")
     tracer = Tracer() if trace else None
-    session = HESession(params, seed=0,
-                        mesh=make_host_mesh(model=model_shards),
-                        batch=batch, use_kernels=use_kernels,
-                        max_age_s=max_age_s, overlap=overlap,
-                        schedule=schedule, tracer=tracer,
-                        profile_stages=profile_stages)
+    if workers > 0:
+        if profile_stages or overlap:
+            raise ValueError(
+                "--profile-stages/--overlap are single-server knobs; "
+                "the multi-host frontend pipelines across workers "
+                "instead of double-buffering one engine")
+        sk, pk, evk = keygen(params, seed=0)
+        frontend = HEFrontend(
+            params, evk, mesh=make_host_mesh(model=model_shards),
+            batch=batch, workers=workers, use_kernels=use_kernels,
+            max_age_s=max_age_s, schedule=schedule, tracer=tracer)
+        session = HESession(params, sk=sk, pk=pk, evk=evk,
+                            server=frontend)
+    else:
+        session = HESession(params, seed=0,
+                            mesh=make_host_mesh(model=model_shards),
+                            batch=batch, use_kernels=use_kernels,
+                            max_age_s=max_age_s, overlap=overlap,
+                            schedule=schedule, tracer=tracer,
+                            profile_stages=profile_stages)
     server = session.server
     if rotations:
         session.ensure_rotation_keys([1])
@@ -293,6 +313,12 @@ def main():
                          "chain steps run as fenced block-jitted stages "
                          "(bitwise identical, slower) and the per-stage "
                          "split prints after the drain")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serve through the multi-host tier: an "
+                         "HEFrontend routing batches by (op, level) "
+                         "affinity to this many in-process worker "
+                         "engines, with heartbeat health and worker-"
+                         "death requeue (0 = single HEServer)")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="dump the unified MetricsRegistry snapshot "
                          "(serve/cache/scheduler/engine/client planes) "
@@ -311,7 +337,7 @@ def main():
                          traced=args.traced, check=args.check,
                          trace=args.trace,
                          profile_stages=args.profile_stages,
-                         metrics=args.metrics)
+                         metrics=args.metrics, workers=args.workers)
         ops = ", ".join(
             f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
             f"(p50 {d['latency_ms']['p50']}ms, "
@@ -322,6 +348,12 @@ def main():
               f"steps_compiled={stats['engine']['steps_compiled']} "
               f"(compile {stats['engine']['compile_s']}s)")
         print(f"  {ops}")
+        if args.workers:
+            fr = stats["frontend"]
+            print(f"  frontend: {fr['workers']} {fr['transport']} "
+                  f"worker(s), {fr['alive']} alive, "
+                  f"{fr['deaths']} death(s), "
+                  f"{fr['requeued_requests']} requeued")
         if args.schedule:
             sch, cb = stats["scheduler"], stats["cobatch"]
             print(f"  scheduler: lookahead={sch['lookahead']} "

@@ -26,10 +26,10 @@ and the queue-wait vs device-wall latency decomposition (`report.py`).
 See docs/OBSERVABILITY.md for the span taxonomy and naming contract.
 """
 
-from repro.obs.registry import MetricsRegistry
+from repro.obs.registry import MetricsRegistry, merge_snapshots
 from repro.obs.stages import STAGES, StageTimer
 from repro.obs.stats import Reservoir
 from repro.obs.trace import Span, Tracer
 
-__all__ = ["MetricsRegistry", "Reservoir", "Span", "StageTimer",
-           "STAGES", "Tracer"]
+__all__ = ["MetricsRegistry", "merge_snapshots", "Reservoir", "Span",
+           "StageTimer", "STAGES", "Tracer"]

@@ -31,7 +31,7 @@ from typing import Callable, Dict
 
 from repro.obs.stats import Reservoir
 
-__all__ = ["Counter", "Gauge", "MetricsRegistry"]
+__all__ = ["Counter", "Gauge", "MetricsRegistry", "merge_snapshots"]
 
 
 class Counter:
@@ -118,3 +118,28 @@ class MetricsRegistry:
             except Exception as e:          # noqa: BLE001 — see docstring
                 out[name] = {"error": f"{type(e).__name__}: {e}"}
         return out
+
+
+def merge_snapshots(snaps: Dict[str, dict]) -> dict:
+    """Merge per-publisher registry snapshots into one document with
+    every label namespaced by its publisher id.
+
+    Multi-host serving has N workers each publishing its own registry
+    (every worker counts "worker.batches", sources its own "engine"
+    view, ...). Naively dict-merging those snapshots silently keeps one
+    publisher's value per colliding key; prefixing every instrument key
+    and source name with ``"<publisher>."`` makes collisions impossible
+    by construction while keeping the merged document's top-level shape
+    (counters/gauges/histograms + source sub-docs) identical to a
+    single registry's — heartbeat consumers parse either.
+    """
+    out: dict = {"counters": {}, "gauges": {}, "histograms": {}}
+    for pub, snap in sorted(snaps.items()):
+        for section in ("counters", "gauges", "histograms"):
+            for k, v in (snap.get(section) or {}).items():
+                out[section][f"{pub}.{k}"] = v
+        for name, sub in snap.items():
+            if name in ("counters", "gauges", "histograms"):
+                continue
+            out[f"{pub}.{name}"] = sub
+    return out

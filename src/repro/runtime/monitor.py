@@ -18,7 +18,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Optional
+from typing import Callable, Dict, Optional
 
 
 class StepMonitor:
@@ -51,9 +51,32 @@ class StepMonitor:
         self.reanchors = []          # (step, old_ema, new_ema)
         self._streak = 0
         self._streak_min = float("inf")
+        # per-publisher child monitors (multi-host: one per worker id) —
+        # see `record(worker=...)`
+        self._per: Dict[object, "StepMonitor"] = {}
 
-    def record(self, step: int, seconds: float) -> bool:
-        """Returns True if this step breached the SLA (straggler signal)."""
+    def for_worker(self, worker) -> "StepMonitor":
+        """The child monitor for one publisher (same knobs), created on
+        first use. A single StepMonitor fed by N workers would mix their
+        step-time distributions into one EMA — worker 0's fast steps
+        would make worker 1's normal steps read as breaches, and one
+        straggling worker would drag every baseline. Namespacing by
+        worker id keeps each publisher's SLA independent (the same
+        collision the registry's `merge_snapshots` solves for labels)."""
+        if worker not in self._per:
+            self._per[worker] = StepMonitor(
+                ema_alpha=self.alpha, slack=self.slack,
+                warmup_steps=self.warmup,
+                reanchor_after=self.reanchor_after,
+                reanchor_cap=self.reanchor_cap)
+        return self._per[worker]
+
+    def record(self, step: int, seconds: float, worker=None) -> bool:
+        """Returns True if this step breached the SLA (straggler signal).
+        With `worker`, the sample routes to that publisher's child
+        monitor instead of the shared baseline."""
+        if worker is not None:
+            return self.for_worker(worker).record(step, seconds)
         self.count += 1
         if self.count <= self.warmup:
             # min over warmup: the first step carries compilation time and
@@ -90,33 +113,60 @@ class Heartbeat:
     `snapshot() -> dict`): each beat embeds the current snapshot under
     a "metrics" key, so the supervisor reading the heartbeat for
     liveness gets the serving telemetry plane for free — the health
-    channel the ROADMAP's multi-host tier consumes.
+    channel the multi-host tier consumes. `metrics` may instead be a
+    dict of {publisher_id: registry-or-snapshot}: multiple publishers'
+    snapshots are then merged with their label spaces namespaced by
+    publisher id (`repro.obs.registry.merge_snapshots`), so two workers
+    both counting "worker.batches" never collide in one heartbeat.
+
+    `clock` is the timestamp source for the "time" field AND the
+    interval gate (default wall `time.time`). The frontend's in-process
+    fault tests inject their fake clock here so `is_alive(..., now=...)`
+    compares on one timeline; subprocess workers keep wall time, which
+    matches the frontend's wall-clock death detection.
     """
 
-    def __init__(self, path: str, interval: float = 10.0, metrics=None):
+    def __init__(self, path: str, interval: float = 10.0, metrics=None,
+                 clock: Callable[[], float] = time.time):
         self.path = path
         self.interval = interval
         self.metrics = metrics
-        self._last = 0.0
+        self._clock = clock
+        self._last: Optional[float] = None
+
+    def _metrics_doc(self) -> dict:
+        m = self.metrics
+        if isinstance(m, dict):
+            from repro.obs.registry import merge_snapshots
+            return merge_snapshots({
+                str(k): (v.snapshot() if hasattr(v, "snapshot")
+                         else dict(v))
+                for k, v in m.items()})
+        return m.snapshot()
 
     def beat(self, step: int, payload: Optional[dict] = None) -> None:
-        now = time.time()
-        if now - self._last < self.interval:
+        now = self._clock()
+        if self._last is not None and now - self._last < self.interval:
             return
         self._last = now
         doc = {"step": step, "time": now, **(payload or {})}
         if self.metrics is not None:
-            doc["metrics"] = self.metrics.snapshot()
+            doc["metrics"] = self._metrics_doc()
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(doc, f)
         os.replace(tmp, self.path)
 
     @staticmethod
-    def is_alive(path: str, timeout: float) -> bool:
+    def is_alive(path: str, timeout: float,
+                 now: Optional[float] = None) -> bool:
+        """Whether the file was beaten within `timeout` of `now`
+        (default wall time; pass a fake-clock reading when the beats
+        were stamped by an injected clock)."""
         try:
             with open(path) as f:
                 data = json.load(f)
-            return time.time() - data["time"] < timeout
+            t = time.time() if now is None else now
+            return t - data["time"] < timeout
         except (OSError, ValueError, KeyError):
             return False

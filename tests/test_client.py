@@ -10,12 +10,6 @@ bitwise-identical to (1) the hand-written CircuitOp list and (2) the
 composed core.heaan references, on the 1-device and 8-device harnesses.
 """
 
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
 import numpy as np
 import pytest
 
@@ -32,8 +26,6 @@ from repro.core.rotate import conj_keygen, he_conjugate, he_rotate, \
     rot_keygen
 from repro.hserve import CircuitOp, HEServer
 from repro.hserve.circuit import execute_circuit_reference
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # logp=24 over logQ=120 leaves L=5: depth-2 traces keep two spare levels
 PARAMS = small_params(logN=4, beta_bits=32, logQ=120, logp=24)
@@ -531,18 +523,11 @@ def test_random_traced_exprs_bitwise_vs_reference(session, galois):
 # 8-device mesh harness (subprocess, as tests/test_hserve.py)
 # --------------------------------------------------------------------------
 
-def test_traced_client_bitwise_on_8_device_mesh():
+def test_traced_client_bitwise_on_8_device_mesh(run_in_8dev_subprocess):
     """The acceptance expression AND seeded random traces, served by an
     HESession on a (2, 4) mesh: bitwise == composed core references,
     ≈ shadows, with a plaintext-cache hit on the repeated run."""
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = \
-            "--xla_force_host_platform_device_count=8"
-        import json
-        import jax
-        import numpy as np
-        import repro.core
+    res = run_in_8dev_subprocess("""
         from repro.client import HESession, compile_handle
         from repro.client.testing import random_expr
         from repro.core import test_params
@@ -597,13 +582,6 @@ def test_traced_client_bitwise_on_8_device_mesh():
             "plain_hits": st["cache"]["plain_hits"],
             "levels": st["levels_served"]}))
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=900)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
-    res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["devices"] == 8
     assert res["ok"], "traced client diverged from core on the 8-dev mesh"
     assert res["max_err"] < 1e-2

@@ -1,45 +1,18 @@
 """Distribution layer tests.
 
 Multi-device behaviours (sharded HE pipeline correctness, compressed-DP
-all-reduce, sharding-rule placement) run in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8 — the flag must be set
-before jax initializes, and the main test process has already done so.
+all-reduce, sharding-rule placement) run through the shared
+``run_in_8dev_subprocess`` harness (tests/conftest.py): a fresh
+interpreter with XLA_FLAGS=--xla_force_host_platform_device_count=8 —
+the flag must be set before jax initializes, and the main test process
+has already done so.
 """
 
-import json
-import os
-import subprocess
-import sys
-import textwrap
 
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_subprocess(body: str) -> dict:
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = \
-            "--xla_force_host_platform_device_count=8"
-        import json
-        import jax
-        import jax.numpy as jnp
-        import numpy as np
-        import repro.core
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=900)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
-def test_he_pipeline_matches_core_on_mesh():
+def test_he_pipeline_matches_core_on_mesh(run_in_8dev_subprocess):
     """Sharded HE Mul (batch→data, np→model) == core.heaan.he_mul, bitwise,
     on a (2, 4) mesh of 8 placeholder devices."""
-    res = _run_subprocess("""
+    res = run_in_8dev_subprocess("""
         from repro.core import test_params
         from repro.core import heaan as H
         from repro.core.keys import keygen
@@ -80,8 +53,8 @@ def test_he_pipeline_matches_core_on_mesh():
     assert res["ok"], "sharded HE Mul diverged from core he_mul"
 
 
-def test_compressed_dp_grads_close_to_exact():
-    res = _run_subprocess("""
+def test_compressed_dp_grads_close_to_exact(run_in_8dev_subprocess):
+    res = run_in_8dev_subprocess("""
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.dist.collectives import compressed_psum_grads
@@ -112,8 +85,8 @@ def test_compressed_dp_grads_close_to_exact():
     assert res["err"] <= res["tol"], (res["err"], res["tol"])
 
 
-def test_param_sharding_rules_place_and_divide():
-    res = _run_subprocess("""
+def test_param_sharding_rules_place_and_divide(run_in_8dev_subprocess):
+    res = run_in_8dev_subprocess("""
         from repro.configs.registry import get_arch
         from repro.dist.sharding import param_sharding_rules
         from repro.models import init_params

@@ -2,16 +2,11 @@
 engine bitwise parity vs the single-device core references, metrics, and
 the composed server loop.
 
-The 8-device mesh parity check (sharded rotate/mul/slot-sum) runs in a
-subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8, same
-harness as tests/test_dist.py.
+The 8-device mesh parity check (sharded rotate/mul/slot-sum) runs
+through the shared run_in_8dev_subprocess harness (tests/conftest.py):
+a fresh interpreter with
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
-
-import json
-import os
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import pytest
@@ -31,8 +26,6 @@ from repro.hserve import (
     ServeMetrics, TableCache, circuit_schedule, degree4_demo_circuit,
     slot_sum_rotations, validate_circuit,
 )
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 PARAMS = small_params(logN=4, beta_bits=32)   # N=16, n_slots=8, L=5
 
@@ -945,32 +938,12 @@ def test_server_stats_shape(keys):
 # 8-device mesh parity (subprocess harness, as tests/test_dist.py)
 # --------------------------------------------------------------------------
 
-def _run_subprocess(body: str) -> dict:
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = \
-            "--xla_force_host_platform_device_count=8"
-        import json
-        import jax
-        import jax.numpy as jnp
-        import numpy as np
-        import repro.core
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=900)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
-def test_hserve_ops_bitwise_on_8_device_mesh():
+def test_hserve_ops_bitwise_on_8_device_mesh(run_in_8dev_subprocess):
     """Sharded hserve mul + rotate + conjugate + slot_sum — and the
     whole degree-4 submit_circuit chain (mul → rescale → mod-down →
     conjugate → add) — on a (2, 4) mesh are bitwise identical to the
     core references across the served levels."""
-    res = _run_subprocess("""
+    res = run_in_8dev_subprocess("""
         from repro.core import heaan as H
         from repro.core import test_params
         from repro.core.keys import keygen

@@ -4,16 +4,15 @@ re-anchoring, the offline report, and the traced+profiled serving path
 (bitwise vs plain serving, all eight lifecycle phases, schema-valid
 trace events).
 
-The 8-device lifecycle check runs in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8, same harness as
-tests/test_hserve.py.
+The 8-device lifecycle check runs through the shared
+run_in_8dev_subprocess harness (tests/conftest.py): a fresh interpreter
+with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 
 import json
 import os
 import subprocess
 import sys
-import textwrap
 
 import numpy as np
 import pytest
@@ -498,31 +497,13 @@ def test_session_publishes_client_counters(keys):
 # 8-device mesh: full lifecycle under sharded serving
 # --------------------------------------------------------------------------
 
-def _run_subprocess(body: str) -> dict:
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = \
-            "--xla_force_host_platform_device_count=8"
-        import json
-        import jax
-        import numpy as np
-        import repro.core
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=900)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
-def test_traced_serving_on_8_device_mesh_records_all_phases():
+def test_traced_serving_on_8_device_mesh_records_all_phases(
+        run_in_8dev_subprocess):
     """Sharded (2, 4)-mesh serving with the tracer and stage profiler
     on: results stay bitwise vs the core references, every one of the
     eight lifecycle phases lands in the trace, every event carries the
     full key set, and mul books stage time."""
-    res = _run_subprocess("""
+    res = run_in_8dev_subprocess("""
         from repro.core import heaan as H
         from repro.core import test_params
         from repro.core.keys import keygen

@@ -64,6 +64,7 @@ BENCH_SCHEMA = {
     "client": dict,
     "analysis": dict,
     "obs": dict,
+    "multihost": dict,
 }
 PARAMS_KEYS = ("logN", "logQ", "logp", "beta_bits")
 TRICKLE_SCHEMA = {"requests": int, "max_age_s": NUM, "p50_ms": NUM,
@@ -99,6 +100,19 @@ OBS_SCHEMA = {"muls": int, "off_drain_s": NUM, "on_drain_s": NUM,
               "overhead_frac": NUM, "trace_events": int,
               "bitwise_identical": bool}
 OBS_MAX_OVERHEAD = 0.02
+# the multi-host frontend/worker scaling A/B (virtual-time makespan
+# over W in-process workers) + the worker-death requeue check.
+# scaling_efficiency_at_4 is GATED ≥ MULTIHOST_MIN_EFF4: the load-first
+# router must spread a hot bucket over the fleet, not pin-and-serialize
+MULTIHOST_SCHEMA = {"muls": int, "batch": int, "transport": str,
+                    "workers_swept": list, "per_workers": dict,
+                    "scaling_efficiency_at_4": NUM, "requeue": dict,
+                    "bitwise_identical": bool}
+# per-W record inside multihost.per_workers
+MULTIHOST_W_SCHEMA = {"busy_s": NUM, "makespan_s": NUM, "mul_per_s": NUM}
+MULTIHOST_REQUEUE_SCHEMA = {"worker_deaths": int, "requeued_requests": int,
+                            "bitwise_identical": bool}
+MULTIHOST_MIN_EFF4 = 0.7
 # every complete ("X") trace event must carry the full key set or the
 # Chrome/Perfetto importers mis-render the lane
 TRACE_EVENT_KEYS = ("pid", "tid", "ts", "dur", "name", "cat")
@@ -207,6 +221,37 @@ def check_bench(bench: Path) -> list:
                 f"{bench.name}.obs: tracing overhead {frac:.1%} exceeds "
                 f"the {OBS_MAX_OVERHEAD:.0%} gate — the lifecycle "
                 "tracer must stay cheap enough to leave on")
+    if isinstance(obj.get("multihost"), dict):
+        mh = obj["multihost"]
+        errors += _check_block(mh, MULTIHOST_SCHEMA,
+                               f"{bench.name}.multihost")
+        if isinstance(mh.get("per_workers"), dict):
+            for wkey, rec in sorted(mh["per_workers"].items()):
+                if isinstance(rec, dict):
+                    errors += _check_block(
+                        rec, MULTIHOST_W_SCHEMA,
+                        f"{bench.name}.multihost.per_workers[{wkey}]")
+        if isinstance(mh.get("requeue"), dict):
+            rq = mh["requeue"]
+            errors += _check_block(rq, MULTIHOST_REQUEUE_SCHEMA,
+                                   f"{bench.name}.multihost.requeue")
+            if rq.get("bitwise_identical") is False:
+                errors.append(
+                    f"{bench.name}.multihost.requeue: worker-death "
+                    "requeue changed a result bit (bitwise_identical "
+                    "false)")
+        if mh.get("bitwise_identical") is False:
+            errors.append(f"{bench.name}.multihost: multi-host serving "
+                          "changed a result bit (bitwise_identical "
+                          "false)")
+        eff = mh.get("scaling_efficiency_at_4")
+        if isinstance(eff, NUM) and not isinstance(eff, bool) \
+                and eff < MULTIHOST_MIN_EFF4:
+            errors.append(
+                f"{bench.name}.multihost: scaling efficiency {eff} at "
+                f"4 workers is below the {MULTIHOST_MIN_EFF4} gate — "
+                "the load-first router must spread hot buckets over "
+                "the fleet instead of pinning them to one worker")
     return errors
 
 
