@@ -15,13 +15,23 @@ BEFORE anything is enqueued:
     per-op worst-case (high-probability) noise growth in the canonical
     embedding, following the paper's §II modulus-chain accounting.
   - :mod:`repro.analysis.rules` — the lint rule registry (stable IDs
-    HS001–HS006 with severities).
+    HS001–HS006 for circuit lints, HS101–HS105 for the compiled-HLO
+    shard lints, each with a severity).
   - :mod:`repro.analysis.cost` — a bench-calibrated cost model
     (device-seconds per (op, level), constants fitted from
     BENCH_serve_he.json) consulted by the circuit-aware scheduler.
   - :mod:`repro.analysis.analyzer` — ties it together into an
     :class:`AnalysisReport`; `python -m repro.analysis` /
     `tools/hslint.py` is the CLI over the example circuits.
+  - :mod:`repro.analysis.xla` — shardlint: lowers every served op on
+    the 1-dev and (2,4) meshes and statically checks the optimized
+    HLO's collective schedule, layouts, peak memory, and fusion count
+    against the `dist.sharding` analytic expectations (HS101–HS105);
+    `python -m repro.analysis.xla` / `tools/shardlint.py` is the CLI.
+    Imports jax lazily — NOT re-exported here.
+  - :mod:`repro.analysis.manifest` — stdlib-only schema + drift diff
+    for the checked-in SHARD_MANIFEST.json (loaded by
+    `tools/check_docs.py` in CI without numpy/jax).
 
 See docs/ANALYSIS.md for the rule catalog, the noise model's
 upper-bound contract, and the cost-model calibration.

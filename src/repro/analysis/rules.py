@@ -30,6 +30,23 @@ The catalog (docs/ANALYSIS.md has the long-form version):
          levels — a smaller logQ would shrink every limb array the
          device touches (the paper's §II point that q sizing is THE
          throughput lever).
+
+The HS1xx series is shardlint (`repro.analysis.xla`): findings about
+the COMPILED serving engines' HLO, not about circuits — emitted by the
+xla pass directly (check=None here, like HS001), against the analytic
+collective/memory expectations `dist.sharding` exports:
+
+  HS101  unexpected-collective   error    a collective kind the
+         sharding rules never predict for that (op, level, mesh) cell —
+         an implicit resharding crept into the lowered program.
+  HS102  collective-bytes-drift  error    measured all-reduce wire
+         bytes off the analytic ring-model prediction beyond tolerance.
+  HS103  layout-churn            error    replica groups over the wrong
+         mesh axis, or a collective count off the predicted schedule.
+  HS104  peak-memory-over-budget error    the backend's peak-live-
+         buffer estimate exceeds the per-device HBM budget.
+  HS105  fusion-break            warning  fused-kernel count drifted
+         from the committed SHARD_MANIFEST.json baseline.
 """
 
 from __future__ import annotations
@@ -188,6 +205,14 @@ RULES: Dict[str, Rule] = {r.id: r for r in (
          _check_rotations),
     Rule("HS005", "info", "eager-rescale", _check_eager_rescale),
     Rule("HS006", "info", "depth-headroom", _check_depth_headroom),
+    # HS1xx: shardlint (repro.analysis.xla) emits these directly over
+    # compiled-HLO cells; registered here so IDs/severities/titles stay
+    # one catalog with stable references for CI greps and docs
+    Rule("HS101", "error", "unexpected-collective", None),
+    Rule("HS102", "error", "collective-bytes-drift", None),
+    Rule("HS103", "error", "layout-churn", None),
+    Rule("HS104", "error", "peak-memory-over-budget", None),
+    Rule("HS105", "warning", "fusion-break", None),
 )}
 
 

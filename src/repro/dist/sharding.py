@@ -66,6 +66,125 @@ def he_eval_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P(axes if axes else None, model))
 
 
+# --------------------------------------------------------------------------
+# HE collective predictions (what the placements above IMPLY on the wire)
+# --------------------------------------------------------------------------
+
+# iCRT cross-prime reductions per served op, split by Fig. 2 region:
+# (region-1 reductions at np1 primes, region-2 reductions at np2 primes).
+# mul: from_eval for d0/d1/d2 in region 1 + the key switch's ks_ax/ks_bx
+# in region 2; rotate/conjugate: the key switch only; slot_sum: one key
+# switch (2 outputs) per doubling round; mul_plain: region 1 only (da,
+# db); the limb-linear ops never leave the coefficient domain.
+_HE_ICRT_REDUCTIONS = {
+    "mul": (3, 2),
+    "rotate": (0, 2),
+    "conjugate": (0, 2),
+    "mul_plain": (2, 0),
+}
+
+
+def _slot_sum_rounds(n_slots: int) -> int:
+    """Doubling rounds of the slot_sum ladder (1, 2, 4, … < n_slots)."""
+    rounds, r = 0, 1
+    while r < n_slots:
+        rounds += 1
+        r *= 2
+    return rounds
+
+
+def mesh_collective_groups(mesh: Mesh) -> dict:
+    """Device-id replica groups a collective over each named mesh axis
+    would use — the oracle shardlint classifies measured HLO replica
+    groups against (a group set matching no axis = layout churn)."""
+    import numpy as np
+    ids = np.vectorize(lambda d: d.id)(mesh.devices)
+    out = {}
+    for i, name in enumerate(mesh.axis_names):
+        moved = np.moveaxis(ids, i, -1).reshape(-1, ids.shape[i])
+        out[str(name)] = sorted(tuple(int(x) for x in row)
+                                for row in moved)
+    return out
+
+
+def he_expected_collectives(op: str, mesh: Mesh, params, logq: int, *,
+                            batch: int, n_slots: Optional[int] = None
+                            ) -> dict:
+    """Predicted collective schedule of one served (op, level) cell under
+    the placements above, with the default "matmul" iCRT strategy.
+
+    Only iCRT's cross-prime accumulation communicates: every residue
+    tensor is (B, np, N) with np on "model", every stage before iCRT is
+    prime-pointwise, and the batch axes make every op batch-pointwise —
+    so each iCRT reduction lowers to EXACTLY three all-reduces over the
+    model-axis groups:
+
+      2 × u64[B_local, N, plimbs]   the partial-product accumulator
+                                    halves of the Σ_j x_j·(P/p_j) matmul
+                                    (plimbs = limb width of P/p_j, from
+                                    `core.context.build_icrt_tables`);
+      1 × f64[B_local, N]           the quotient estimate Σ x_j/p_j that
+                                    picks the exact ±1-corrected k·P.
+
+    Wire bytes use the same ring model as `launch.hlo_analysis`
+    (all-reduce = 2·S·(g−1)/g per device); B_local is the per-data-shard
+    batch (the full batch when it doesn't divide — `he_limb_sharding`
+    falls back to replicated). With model-axis size 1 the partitioner
+    elides every reduction: zero collectives of any kind.
+
+    One tolerated side channel: below logQ, key-switch ops slice the
+    stored (np2_max, N) evk/Galois tables to [:np2] rows, and GSPMD
+    rebalances the model-sharded row axis with small collective-permutes
+    — exactly 4 per consumed key table (ax/bx × value/shoup), each
+    moving at most one destination shard of rows (⌈np2/g⌉·N limbs). The
+    returned "allowed" block bounds them so shardlint can wave them
+    through without opening the door to real resharding regressions.
+    """
+    from repro.core.context import build_icrt_tables
+    g = mesh.shape.get("model", 1)
+    dsize = _axis_size(mesh, data_axes(mesh))
+    b_local = batch // dsize if dsize and batch % dsize == 0 else batch
+    rounds = _slot_sum_rounds(n_slots if n_slots else params.n_slots_max)
+    if op == "slot_sum":
+        red = (0, 2 * rounds)
+    else:
+        red = _HE_ICRT_REDUCTIONS.get(op, (0, 0))
+    n_red = sum(red)
+    n_keys = {"mul": 1, "rotate": 1, "conjugate": 1,
+              "slot_sum": rounds}.get(op, 0)
+    np2, np2_max = params.np_region2(logq), params.np_region2(params.logQ)
+    allowed = {}
+    if n_keys and g > 1 and np2 < np2_max:
+        limb_bytes = 4 if params.beta_bits <= 32 else 8
+        allowed["collective-permute"] = {
+            "max_count": 4 * n_keys,
+            "max_bytes_each": -(-np2 // g) * params.N * limb_bytes,
+        }
+    if g <= 1 or n_red == 0:
+        return {"kinds": [], "counts": {}, "wire_bytes": 0.0,
+                "n_reductions": n_red, "axis": "model", "group_size": g,
+                "allowed": {}}
+
+    def ring(size: float) -> float:
+        return 2.0 * size * (g - 1) / g
+
+    per_region = []
+    total = 0.0
+    for n_r, npn in zip(red, (params.np_region1(logq),
+                              params.np_region2(logq))):
+        if not n_r:
+            continue
+        plimbs = build_icrt_tables(params, npn).plimbs
+        one = 2 * ring(b_local * params.N * plimbs * 8) \
+            + ring(b_local * params.N * 8)
+        per_region.append({"reductions": n_r, "np": npn,
+                           "plimbs": plimbs, "bytes_per_reduction": one})
+        total += n_r * one
+    return {"kinds": ["all-reduce"], "counts": {"all-reduce": 3 * n_red},
+            "wire_bytes": total, "n_reductions": n_red, "axis": "model",
+            "group_size": g, "per_region": per_region, "allowed": allowed}
+
+
 def batch_spec(mesh: Mesh) -> NamedSharding:
     """LM batch placement: leading (batch) dim over the data axes."""
     axes = data_axes(mesh)

@@ -1,0 +1,111 @@
+"""Abstract-table lowering of every served HE engine step (no side
+effects: unlike `launch.dryrun`, importing this module sets no XLA
+flags, so tests and `repro.analysis.xla` can use it in-process).
+
+One function, `lower_he_serving_cell`, covers the FULL served op table
+(`analysis.dataflow.OPS` + `PLAIN_OPS`): it builds the exact step the
+hserve engine would jit for that op — same factory, same table pytrees —
+but lowers it from `he_table_specs` ShapeDtypeStructs alone, so a cell
+compiles in milliseconds with no twiddle-table build. `launch.dryrun`
+re-exports it for the multi-pod dry-run; `repro.analysis.xla`
+(shardlint) lowers every (op, level, mesh) cell through it and checks
+the optimized HLO against the `dist.sharding` collective predictions.
+
+`ct_sharding` deliberately accepts a WRONG placement: shardlint's
+injected-regression path lowers a cell with a bogus rule (e.g. the N
+axis on "model") to prove the analyzer catches the resulting implicit
+resharding (HS101/HS103).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.dataflow import OPS, PLAIN_OPS
+
+__all__ = ["HE_SERVING_OPS", "lower_he_serving_cell", "serving_op_levels"]
+
+# every op the engine serves — the analysis table is the source of truth
+# so a newly served op cannot dodge lowering analysis
+HE_SERVING_OPS = tuple(OPS)
+assert set(PLAIN_OPS) <= set(HE_SERVING_OPS)
+
+
+def serving_op_levels(op: str, levels, params) -> list:
+    """The subset of `levels` at which `op` is actually servable.
+
+    rescale and mod_down consume a level: at the bottom of the modulus
+    chain (logq < 2·logp) there is no level left to drop, and the
+    serving dataflow would never schedule them there.
+    """
+    if op in ("rescale", "mod_down"):
+        return [lq for lq in levels if lq >= 2 * params.logp]
+    return list(levels)
+
+
+def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
+                          params=None, n_slots=None, ct_sharding=None):
+    """Lower ONE hserve engine step with abstract tables -> jax Lowered.
+
+    `rotate`/`conjugate`/`slot_sum` consume the region-2 table spec plus
+    evk-shaped Galois key specs (rotation keys have exactly the evk
+    pytree shape); `mul` takes both region tables + the evk; `rescale`/
+    `mod_down`/`add`/`sub` consume nothing but ciphertext batches — pure
+    limb arithmetic, which is the point the analysis record makes: zero
+    collective bytes at any mesh size. The plaintext-operand ops make
+    the complementary point: `mul_plain` is region 1 alone (its HLO
+    carries NO key-switch collectives, only the CRT/iCRT reduction
+    traffic) and `add_plain` is a bare limb add with nothing on the
+    wire at all.
+
+    `ct_sharding` overrides the ciphertext placement rule
+    (`dist.sharding.he_limb_sharding`) — pass a deliberately wrong
+    NamedSharding to reproduce an implicit-resharding regression.
+    """
+    from repro.core.rotate import conjugation_k, rotation_k
+    from repro.dist import he_pipeline as hp
+    from repro.dist.sharding import he_limb_sharding
+    from repro.hserve.engine import (
+        make_add_plain_step, make_addsub_step, make_he_rotate_step,
+        make_mod_down_step, make_mul_plain_step, make_rescale_step,
+        make_slot_sum_step, slot_sum_rotations,
+    )
+    if params is None:
+        from repro.configs.heaan_mul import CONFIG as params
+    logq = params.logQ if logq is None else logq
+    st = hp.he_static(params, logq)
+    t1, t2, ek = hp.he_table_specs(st)
+    ct_sh = he_limb_sharding(mesh, batch=batch) if ct_sharding is None \
+        else ct_sharding
+    ct = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype,
+                              sharding=ct_sh)
+    if op == "mul":
+        step = hp.make_he_mul_step(st, mesh)
+        return jax.jit(step).lower(t1, t2, ek, ct, ct, ct, ct)
+    if op in ("rotate", "conjugate"):
+        k = rotation_k(params, 1) if op == "rotate" \
+            else conjugation_k(params)
+        step = make_he_rotate_step(st, mesh, k)
+        return jax.jit(step).lower(t2, ek, ct, ct)
+    if op == "slot_sum":
+        n = n_slots if n_slots else params.n_slots_max
+        step = make_slot_sum_step(st, mesh, n)
+        rks = tuple(ek for _ in slot_sum_rotations(n))
+        return jax.jit(step).lower(t2, rks, ct, ct)
+    if op == "rescale":
+        step = make_rescale_step(st, mesh, params.logp)
+        return jax.jit(step).lower(ct, ct)
+    if op == "mod_down":
+        step = make_mod_down_step(st, mesh, max(params.logp,
+                                                logq - params.logp))
+        return jax.jit(step).lower(ct, ct)
+    if op in ("add", "sub"):
+        step = make_addsub_step(st, mesh, op)
+        return jax.jit(step).lower(ct, ct, ct, ct)
+    if op == "mul_plain":
+        step = make_mul_plain_step(st, mesh)
+        return jax.jit(step).lower(t1, ct, ct, ct)   # pt: same spec
+    if op == "add_plain":
+        step = make_add_plain_step(st, mesh)
+        return jax.jit(step).lower(ct, ct, ct)
+    raise ValueError(f"unknown serving op {op!r}; one of {HE_SERVING_OPS}")

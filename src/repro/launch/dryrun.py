@@ -237,63 +237,24 @@ def lower_he_cell(batch: int, mesh, *, logq=None) -> dict:
     return _analyze(lowered, compiled, time.time() - t0)
 
 
-# ops the serving engine adds on top of he_mul; lowered with abstract
-# he_table_specs tables (no multi-second twiddle build), exactly as the
-# engine jits them, so the collective matrix covers the full served set
-HE_SERVING_OPS = ("rotate", "slot_sum", "rescale", "mul_plain",
-                  "add_plain")
+# the FULL served op table (analysis.dataflow.OPS — mul, add, sub,
+# rotate, conjugate, slot_sum, rescale, mod_down, mul_plain, add_plain);
+# the lowering itself lives in launch.cells (no import side effects, so
+# tests and repro.analysis.xla use it in-process) and is re-exported
+# here for the dry-run drivers and older callers.
+from repro.launch.cells import (  # noqa: F401, E402
+    HE_SERVING_OPS, serving_op_levels,
+    lower_he_serving_cell as _lower_serving,
+)
 
 
 def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
                           params=None) -> dict:
-    """Lower + compile one hserve engine step with abstract tables.
-
-    `rotate` and `slot_sum` consume the region-2 table spec plus
-    evk-shaped Galois key specs (rotation keys have exactly the evk
-    pytree shape); `rescale` consumes nothing but the ciphertext batch —
-    it is a pure limb shift, which is the point the analysis record
-    makes: zero collective bytes at any mesh size. The plaintext-operand
-    ops make the complementary point: `mul_plain` is region 1 alone (its
-    HLO carries NO key-switch collectives, only the CRT/iCRT reduction
-    traffic) and `add_plain` is a bare limb add with nothing on the wire
-    at all.
-    """
-    from repro.core.rotate import rotation_k
-    from repro.dist import he_pipeline as hp
-    from repro.dist.sharding import he_limb_sharding
-    from repro.hserve.engine import (
-        make_add_plain_step, make_he_rotate_step, make_mul_plain_step,
-        make_rescale_step, make_slot_sum_step, slot_sum_rotations,
-    )
-    if params is None:
-        from repro.configs.heaan_mul import CONFIG as params
-    logq = params.logQ if logq is None else logq
-    st = hp.he_static(params, logq)
-    t1, t2, ek = hp.he_table_specs(st)
-    ct_sh = he_limb_sharding(mesh, batch=batch)
-    ct = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype,
-                              sharding=ct_sh)
+    """Lower + compile one hserve engine step with abstract tables and
+    return its analysis record (`launch.cells.lower_he_serving_cell`
+    does the lowering; see its docstring for the per-op contracts)."""
     t0 = time.time()
-    if op == "rotate":
-        step = make_he_rotate_step(st, mesh, rotation_k(params, 1))
-        lowered = jax.jit(step).lower(t2, ek, ct, ct)
-    elif op == "slot_sum":
-        n_slots = params.n_slots_max
-        step = make_slot_sum_step(st, mesh, n_slots)
-        rks = tuple(ek for _ in slot_sum_rotations(n_slots))
-        lowered = jax.jit(step).lower(t2, rks, ct, ct)
-    elif op == "rescale":
-        step = make_rescale_step(st, mesh, params.logp)
-        lowered = jax.jit(step).lower(ct, ct)
-    elif op == "mul_plain":
-        step = make_mul_plain_step(st, mesh)
-        lowered = jax.jit(step).lower(t1, ct, ct, ct)   # pt: same spec
-    elif op == "add_plain":
-        step = make_add_plain_step(st, mesh)
-        lowered = jax.jit(step).lower(ct, ct, ct)
-    else:
-        raise ValueError(f"unknown serving op {op!r}; "
-                         f"one of {HE_SERVING_OPS}")
+    lowered = _lower_serving(op, batch, mesh, logq=logq, params=params)
     compiled = lowered.compile()
     return _analyze(lowered, compiled, time.time() - t0)
 

@@ -95,6 +95,55 @@ def test_checker_analysis_block_failure_paths(tmp_path):
     assert not any("traced frontend changed" in e for e in errs)
 
 
+def test_committed_shard_manifest_passes_the_docs_gate():
+    assert check_docs.check_shard_manifest(REPO) == []
+
+
+def test_checker_flags_shard_manifest_problems(tmp_path):
+    """check_shard_manifest's failure paths: a missing committed file, a
+    schema violation, and committed-vs-fresh drift each produce their
+    own message (and the checker stays stdlib — it loads manifest.py by
+    file path, so the repo layout must be mirrored)."""
+    import json as _json
+    import shutil
+
+    ana = tmp_path / "src" / "repro" / "analysis"
+    ana.mkdir(parents=True)
+    shutil.copy(REPO / "src" / "repro" / "analysis" / "manifest.py",
+                ana / "manifest.py")
+
+    # 1. committed manifest missing entirely
+    errs = check_docs.check_shard_manifest(tmp_path)
+    assert any("file missing" in e and "shardlint.py --write" in e
+               for e in errs)
+
+    # 2. schema violation in the committed file
+    committed = _json.loads((REPO / "SHARD_MANIFEST.json").read_text())
+    bad = _json.loads(_json.dumps(committed))
+    del bad["hbm_budget_bytes"]
+    (tmp_path / "SHARD_MANIFEST.json").write_text(_json.dumps(bad))
+    errs = check_docs.check_shard_manifest(tmp_path)
+    assert any("missing key 'hbm_budget_bytes'" in e for e in errs)
+
+    # 3. drift: a fresh measurement whose mul collective schedule changed
+    (tmp_path / "SHARD_MANIFEST.json").write_text(_json.dumps(committed))
+    fresh = _json.loads(_json.dumps(committed))
+    key = "mul/120/2x4"
+    fresh["cells"][key]["collectives"]["counts"]["all-reduce"] += 1
+    fresh_p = tmp_path / "fresh.json"
+    fresh_p.write_text(_json.dumps(fresh))
+    errs = check_docs.check_shard_manifest(tmp_path, fresh_p)
+    assert len(errs) == 1
+    assert "drift vs fresh.json" in errs[0] and key in errs[0]
+    # identical fresh measurement -> clean
+    fresh_p.write_text(_json.dumps(committed))
+    assert check_docs.check_shard_manifest(tmp_path, fresh_p) == []
+    # fresh path that does not exist is its own message
+    errs = check_docs.check_shard_manifest(tmp_path,
+                                           tmp_path / "nope.json")
+    assert any("nope.json" in e and "file missing" in e for e in errs)
+
+
 def test_ci_runs_the_docs_step():
     """The acceptance criterion says the link check runs in CI — pin the
     workflow wiring so a refactor can't silently drop it."""
@@ -109,3 +158,14 @@ def test_ci_runs_lint_and_hslint_steps():
     assert "ruff check ." in wf
     assert "mypy src/repro/analysis" in wf
     assert "repro.analysis" in wf.split("fast-tier")[1]
+
+
+def test_ci_runs_the_shardlint_gate_and_its_self_test():
+    """The shardlint acceptance wiring: fast-tier must run the full
+    grid, drift-diff it against the committed manifest, AND prove the
+    gate can go red (the injected-regression step inverts the exit
+    code, so shardlint succeeding there fails CI)."""
+    wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "tools/shardlint.py --out /tmp/shard_fresh.json" in wf
+    assert "check_docs.py --shard-manifest /tmp/shard_fresh.json" in wf
+    assert "--inject bogus-ct-sharding" in wf

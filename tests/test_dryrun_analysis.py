@@ -4,8 +4,11 @@ Imports repro.launch.hlo_analysis (NOT dryrun, whose import sets XLA_FLAGS
 for 512 placeholder devices — a side effect no test process wants).
 """
 
+import pytest
+
 import repro.core  # noqa: F401
-from repro.launch.hlo_analysis import collective_bytes_from_hlo
+from repro.launch.hlo_analysis import (collective_bytes_from_hlo,
+                                       count_fusions, parse_replica_groups)
 from benchmarks.roofline import analyze_record, model_flops
 
 
@@ -34,6 +37,85 @@ def test_collective_parser_counts_and_ring_bytes():
     assert r["bytes"]["all-to-all"] == 2 * 2 * 4 * 3 / 4
     assert r["bytes"]["collective-permute"] == 8 * 8 * 4
     assert r["total_bytes"] == sum(r["bytes"].values())
+
+
+def test_parse_replica_groups_literal_and_empty():
+    g, s = parse_replica_groups("replica_groups={{0,1},{2,3}}")
+    assert g == [(0, 1), (2, 3)] and s == 2
+    g, s = parse_replica_groups("replica_groups={{0,1,2,3},{4,5,6,7}}")
+    assert g == [(0, 1, 2, 3), (4, 5, 6, 7)] and s == 4
+    # empty form = one group of every participant; size falls back to
+    # the program's device count when the caller knows it
+    g, s = parse_replica_groups("replica_groups={}")
+    assert g is None and s == 1
+    g, s = parse_replica_groups("replica_groups={}", default_group_size=8)
+    assert g is None and s == 8
+    # no replica_groups attribute at all (collective-permute lines)
+    g, s = parse_replica_groups("source_target_pairs={{0,1}}")
+    assert g is None and s == 1
+
+
+def test_parse_replica_groups_iota_forms():
+    # [G,S]<=[N]: iota(8) reshaped (2,4) — contiguous groups
+    g, s = parse_replica_groups("replica_groups=[2,4]<=[8]")
+    assert s == 4
+    assert g == [(0, 1, 2, 3), (4, 5, 6, 7)]
+    # transposed iota: groups are the COLUMNS of iota(8)->(2,4) — this
+    # is what GSPMD emits for the model axis of a ("data","model") mesh
+    g, s = parse_replica_groups("replica_groups=[4,2]<=[2,4]T(1,0)")
+    assert s == 2
+    assert g == [(0, 4), (1, 5), (2, 6), (3, 7)]
+    # identity transpose == plain iota
+    g, s = parse_replica_groups("replica_groups=[2,4]<=[2,4]T(0,1)")
+    assert g == [(0, 1, 2, 3), (4, 5, 6, 7)] and s == 4
+    # inconsistent dims (product mismatch): size still parsed, no groups
+    g, s = parse_replica_groups("replica_groups=[2,4]<=[4]")
+    assert g is None and s == 4
+
+
+def test_collective_parser_iota_group_wire_bytes():
+    # ring bytes must use the iota group SIZE (4), not the device total
+    r = collective_bytes_from_hlo(
+        "%ar = f32[8,8]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8]")
+    assert r["counts"]["all-reduce"] == 1
+    assert r["bytes"]["all-reduce"] == 2 * (8 * 8 * 4) * 3 / 4
+    (rec,) = r["ops"]
+    assert rec["group_size"] == 4 and rec["n_groups"] == 2
+    assert rec["groups"] == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+
+def test_collective_parser_async_tuple_output_half():
+    # an all-gather-start tuple is (operands..., outputs...): only the
+    # output half is sized, and the -done line adds nothing
+    hlo = """
+      %ags = (f32[8,16]{1,0}, f32[16,16]{1,0}) all-gather-start(%p), replica_groups={{0,1}}
+      %agd = f32[16,16]{1,0} all-gather-done(%ags)
+    """
+    r = collective_bytes_from_hlo(hlo)
+    assert r["counts"] == {"all-reduce": 0, "all-gather": 1,
+                           "reduce-scatter": 0, "all-to-all": 0,
+                           "collective-permute": 0}
+    (rec,) = r["ops"]
+    assert rec["async"] and rec["size_bytes"] == 16 * 16 * 4
+    assert r["bytes"]["all-gather"] == 16 * 16 * 4 * (2 - 1) / 2
+
+
+def test_collective_parser_unknown_dtype_still_counted():
+    r = collective_bytes_from_hlo(
+        "%x = u4[64]{0} all-reduce(%y), replica_groups={{0,1}}")
+    assert r["counts"]["all-reduce"] == 1       # schedule still visible
+    assert r["total_bytes"] == 0.0              # but no sizing guess
+
+
+def test_count_fusions():
+    hlo = """
+      %fused_computation { %p0 = f32[4]{0} parameter(0) }
+      %f.1 = f32[4]{0} fusion(%a), kind=kLoop, calls=%fused_computation
+      %f.2 = (f32[4]{0}, f32[4]{0}) fusion(%a, %b), kind=kOutput
+      %add = f32[4]{0} add(%a, %b)
+    """
+    assert count_fusions(hlo) == 2
+    assert count_fusions("%x = f32[4]{0} add(%a, %b)") == 0
 
 
 def test_collective_parser_ignores_done_and_noncollectives():
@@ -81,59 +163,60 @@ def test_model_flops_formulas():
 # launch.dryrun itself is never imported here, its import sets XLA_FLAGS)
 # --------------------------------------------------------------------------
 
-def _serving_lowered(op: str, batch: int = 2):
+def _serving_lowered(op: str, batch: int = 2, logq=None):
     import jax
 
     from repro.core.params import test_params
-    from repro.core.rotate import rotation_k
-    from repro.dist import he_pipeline as hp
-    from repro.dist.sharding import he_limb_sharding
-    from repro.hserve.engine import (
-        make_add_plain_step, make_he_rotate_step, make_mul_plain_step,
-        make_rescale_step, make_slot_sum_step, slot_sum_rotations,
-    )
+    from repro.launch.cells import lower_he_serving_cell
 
     params = test_params(logN=4, beta_bits=32)
-    st = hp.he_static(params, params.logQ)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    t1, t2, ek = hp.he_table_specs(st)        # abstract tables: no twiddle
-    ct_sh = he_limb_sharding(mesh, batch=batch)     # build, pure specs
-    ct = jax.ShapeDtypeStruct((batch, st.N, st.qlimbs), st.dtype,
-                              sharding=ct_sh)
-    if op == "rotate":
-        step = make_he_rotate_step(st, mesh, rotation_k(params, 1))
-        return jax.jit(step).lower(t2, ek, ct, ct)
-    if op == "slot_sum":
-        n = params.n_slots_max
-        step = make_slot_sum_step(st, mesh, n)
-        rks = tuple(ek for _ in slot_sum_rotations(n))
-        return jax.jit(step).lower(t2, rks, ct, ct)
-    if op == "rescale":
-        step = make_rescale_step(st, mesh, params.logp)
-        return jax.jit(step).lower(ct, ct)
-    if op == "mul_plain":
-        step = make_mul_plain_step(st, mesh)
-        return jax.jit(step).lower(t1, ct, ct, ct)
-    if op == "add_plain":
-        step = make_add_plain_step(st, mesh)
-        return jax.jit(step).lower(ct, ct, ct)
-    raise ValueError(op)
+    return lower_he_serving_cell(op, batch, mesh, logq=logq, params=params)
 
 
-def test_serving_steps_lower_with_abstract_tables():
-    """rotate / slot_sum / rescale / mul_plain / add_plain lower +
-    compile from he_table_specs alone and produce a full analysis record
-    (the dryrun --he serving cells' contract)."""
+def _full_op_table():
+    from repro.launch.cells import HE_SERVING_OPS
+    return HE_SERVING_OPS
+
+
+@pytest.mark.parametrize("op", _full_op_table())
+def test_serving_steps_lower_with_abstract_tables(op):
+    """EVERY op in the served table (`analysis.dataflow.OPS` — mul, add,
+    sub, rotate, conjugate, slot_sum, rescale, mod_down, mul_plain,
+    add_plain) lowers + compiles from he_table_specs alone and produces a
+    full analysis record, so no served op can dodge dry-run/shardlint
+    coverage."""
     from repro.launch.hlo_analysis import analyze_compiled
 
-    for op in ("rotate", "slot_sum", "rescale", "mul_plain", "add_plain"):
-        lowered = _serving_lowered(op)
-        rec = analyze_compiled(lowered, lowered.compile(), 0.0)
-        assert set(rec) >= {"flops", "bytes_accessed", "collectives",
-                            "memory", "compile_seconds"}, op
-        assert rec["collectives"]["counts"] is not None, op
-        # single-device mesh: nothing should hit the wire
-        assert rec["collectives"]["total_bytes"] == 0.0, op
+    lowered = _serving_lowered(op)
+    rec = analyze_compiled(lowered, lowered.compile(), 0.0)
+    assert set(rec) >= {"flops", "bytes_accessed", "collectives",
+                        "memory", "fusions", "compile_seconds"}, op
+    assert rec["collectives"]["counts"] is not None, op
+    # single-device mesh: nothing should hit the wire
+    assert rec["collectives"]["total_bytes"] == 0.0, op
+
+
+def test_serving_op_table_matches_dataflow_and_levels_filter():
+    """The lowering table is generated FROM the analysis dataflow op set
+    (a newly served op cannot dodge coverage), and level filtering only
+    trims the level-consuming ops at the chain bottom."""
+    from repro.analysis.dataflow import OPS, PLAIN_OPS
+    from repro.core.params import test_params
+    from repro.launch.cells import HE_SERVING_OPS, serving_op_levels
+
+    assert set(HE_SERVING_OPS) == set(OPS)
+    assert set(PLAIN_OPS) <= set(HE_SERVING_OPS)
+    params = test_params(logN=4, beta_bits=32)
+    levels = (params.logQ, 3 * params.logp, params.logp)
+    for op in HE_SERVING_OPS:
+        got = serving_op_levels(op, levels, params)
+        if op in ("rescale", "mod_down"):
+            assert got == [lq for lq in levels if lq >= 2 * params.logp], op
+        else:
+            assert got == list(levels), op
+    with pytest.raises(ValueError, match="unknown serving op"):
+        _serving_lowered("bootstrap")
 
 
 def test_plain_ops_have_no_keyswitch_collectives_and_cost_less():

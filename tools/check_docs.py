@@ -12,6 +12,18 @@ test install finishes, and the driver repo bans new deps):
      the `trickle` and `overlap` blocks this PR's benchmark emits. The
      `obs` block additionally GATES: tracing overhead ≤ 2% and
      bitwise-identical results (always-on tracing must be free).
+  3. SHARD_MANIFEST.json (shardlint's measured collective/fusion/memory
+     record per served (op, level, mesh) cell) must match its schema;
+     with `--shard-manifest FRESH.json` a freshly measured manifest
+     (tools/shardlint.py --json --out FRESH.json) is DIFFED against the
+     committed one — any collective count / wire bytes / fusion /
+     group-axis drift fails CI until the manifest is regenerated
+     (tools/shardlint.py --write) and the diff explained in review.
+
+The shard-manifest schema/diff logic lives in
+src/repro/analysis/manifest.py (stdlib-only) and is loaded here by file
+path, bypassing the repro.analysis package __init__ (which imports
+numpy — unavailable in the docs CI job).
 
 With `--trace` / `--metrics`, the repro.obs artifacts a serve run wrote
 are validated instead: every Chrome trace event carries the full
@@ -23,6 +35,7 @@ Exit code 0 = clean; 1 = problems (each printed on its own line).
 
     python tools/check_docs.py [--repo PATH]
     python tools/check_docs.py --trace trace.json --metrics metrics.json
+    python tools/check_docs.py --shard-manifest /tmp/shard_fresh.json
 """
 
 from __future__ import annotations
@@ -255,6 +268,51 @@ def check_bench(bench: Path) -> list:
     return errors
 
 
+def _manifest_mod(repo: Path):
+    """Load src/repro/analysis/manifest.py by file path (stdlib-only by
+    contract) without importing the repro.analysis package."""
+    import importlib.util
+    p = repo / "src" / "repro" / "analysis" / "manifest.py"
+    spec = importlib.util.spec_from_file_location("_shard_manifest", p)
+    if spec is None or spec.loader is None:
+        raise ImportError(f"cannot load {p}")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def check_shard_manifest(repo: Path, fresh: Path | None = None) -> list:
+    """Schema-check the committed SHARD_MANIFEST.json; with `fresh`, also
+    drift-diff a freshly measured manifest against it (the CI gate that
+    makes collective-schedule changes reviewable)."""
+    try:
+        mod = _manifest_mod(repo)
+    except Exception as e:
+        return [f"manifest module: {type(e).__name__}: {e}"]
+    committed_path = repo / mod.MANIFEST_NAME
+    if not committed_path.exists():
+        return [f"{mod.MANIFEST_NAME}: file missing (regenerate with "
+                "tools/shardlint.py --write)"]
+    try:
+        committed = mod.load_manifest(committed_path)
+    except ValueError as e:
+        return [f"{mod.MANIFEST_NAME}: {e}"]
+    except json.JSONDecodeError as e:
+        return [f"{mod.MANIFEST_NAME}: invalid JSON ({e})"]
+    errors = mod.validate_manifest(committed)
+    if fresh is not None:
+        if not fresh.exists():
+            return errors + [f"{fresh}: file missing"]
+        try:
+            fresh_obj = mod.load_manifest(fresh)
+        except (ValueError, json.JSONDecodeError) as e:
+            return errors + [f"{fresh.name}: {e}"]
+        errors += mod.validate_manifest(fresh_obj, fresh.name)
+        errors += [f"{mod.MANIFEST_NAME} drift vs {fresh.name}: {d}"
+                   for d in mod.diff_manifests(committed, fresh_obj)]
+    return errors
+
+
 def check_trace(path: Path) -> list:
     """Validate a Chrome trace-event JSON written by `serve --he
     --trace`: well-formed, full key set on every complete event, and
@@ -330,6 +388,11 @@ def main(argv=None) -> int:
                     help="validate a MetricsRegistry snapshot written "
                          "by `serve --he --metrics`; skips the "
                          "link/bench checks")
+    ap.add_argument("--shard-manifest", default=None, type=Path,
+                    help="drift-diff THIS freshly measured shardlint "
+                         "manifest (tools/shardlint.py --out) against "
+                         "the committed SHARD_MANIFEST.json; skips the "
+                         "link/bench checks")
     args = ap.parse_args(argv)
     if args.trace is not None or args.metrics is not None:
         errors = []
@@ -337,11 +400,14 @@ def main(argv=None) -> int:
             errors += check_trace(args.trace)
         if args.metrics is not None:
             errors += check_metrics(args.metrics)
+    elif args.shard_manifest is not None:
+        errors = check_shard_manifest(args.repo, args.shard_manifest)
     elif args.bench is not None:
         errors = check_bench(args.bench)
     else:
         errors = check_links(args.repo) \
-            + check_bench(args.repo / "BENCH_serve_he.json")
+            + check_bench(args.repo / "BENCH_serve_he.json") \
+            + check_shard_manifest(args.repo)
     for e in errors:
         print(e)
     if not errors:

@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""shardlint CLI wrapper: static HLO/collective analysis of the
+compiled serving engines on BOTH the 1-dev and (2,4) meshes.
+
+XLA fixes its device count at the first jax import, so the 8-host-device
+flag must be in the environment before anything imports jax — this
+wrapper guarantees that, then delegates to `repro.analysis.xla` (which
+is also runnable directly as `python -m repro.analysis.xla` in an
+already-configured process). Run from the repo root:
+
+    python tools/shardlint.py --json            # analyze + check
+    python tools/shardlint.py --write           # regenerate the manifest
+    python tools/shardlint.py --json --out /tmp/fresh.json
+    python tools/check_docs.py --shard-manifest /tmp/fresh.json
+
+Exit 1 = error-severity HS1xx findings (see docs/ANALYSIS.md).
+"""
+
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+
+
+def _force_devices() -> None:
+    assert "jax" not in sys.modules, \
+        "tools/shardlint.py must run before any jax import"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}".strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main() -> int:
+    _force_devices()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(repo, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.analysis.xla import main as xla_main
+    return xla_main(sys.argv[1:])
+
+
+if __name__ == "__main__":
+    sys.exit(main())
