@@ -33,6 +33,12 @@ additions, schema documented in docs/SERVING.md):
     cost-skip counts, the model's estimated device-seconds per circuit,
     and a bitwise-identical guard (cost-gated scheduling must never
     change a result bit);
+  - "boot": the repro.boot batched-bootstrapping A/B — one bootstrap
+    per drain vs two concurrent pipelines co-draining on the reference
+    small-param bootstrap config: per-bootstrap latency, cross-circuit
+    co-batch rate (> 0 is gated by check_docs — the batched payoff),
+    and the error contract (max_err ≤ the documented plan bound,
+    precision_bits in/out — bootstrap is approximate, never bitwise);
   - "obs": the repro.obs tracing overhead A/B — the same mul stream
     drained with the request-lifecycle Tracer detached vs attached,
     interleaved min-of-3: drain walls, overhead fraction (gated ≤2% by
@@ -55,6 +61,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 import time
 
@@ -420,6 +427,65 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
     fr = fe.stats()["frontend"]
     fe.close()
 
+    # ---- boot: the batched-bootstrapping A/B -----------------------------
+    # served CKKS bootstrapping (repro.boot) on its OWN server at the
+    # reference small-param config (the pipeline needs logQ = 14·logp,
+    # independent of this record's params). A = one bootstrap per
+    # drain; B = two concurrent bootstraps in one drain — the batched
+    # payoff is the circuit scheduler co-batching their aligned
+    # rotation/mul stages ACROSS the two pipelines (cross_circuit_rate
+    # > 0 is gated by tools/check_docs.py, as is the error contract:
+    # bootstrap is approximate, max_err must stay ≤ the documented
+    # plan.error_bound()).
+    from repro.boot import boot_params, bootstrap_circuit
+
+    bp = boot_params()
+    bsk, bpk, bevk = keygen(bp, seed=0)
+    brot = {r: rot_keygen(bp, bsk, r) for r in (1, 2, 3, 4)}
+    bsrv = HEServer(bp, bevk, brot, conj_keygen(bp, bsk),
+                    mesh=make_host_mesh(), batch=batch, schedule=True)
+    plan = bootstrap_circuit(bp, logq_in=bp.logp,
+                             plain_lookup=bsrv.cache.has_plain)
+    brng = np.random.default_rng(99)
+    bn = bp.n_slots_max
+
+    def bmsg():
+        z = brng.uniform(-1, 1, bn) + 1j * brng.uniform(-1, 1, bn)
+        return z * (plan.msg_bound / np.max(np.abs(z)))
+
+    bmsgs = [bmsg() for _ in range(2)]
+    bcts = [H.he_mod_down(H.encrypt_message(z, bpk, bp, seed=200 + i),
+                          bp, bp.logp) for i, z in enumerate(bmsgs)]
+    err_in = max(float(np.max(np.abs(
+        H.decrypt_message(ct, bsk, bp) - z)))
+        for ct, z in zip(bcts, bmsgs))
+
+    # warm-up bootstrap compiles every pipeline (op, level) cell
+    bsrv.submit_bootstrap(bcts[0], plan=plan)
+    bsrv.drain()
+    boot_compile_s = bsrv.engine.compile_s
+
+    bsrv.reset_metrics()                      # A: solo
+    t0 = time.perf_counter()
+    bsrv.submit_bootstrap(bcts[0], plan=plan)
+    bsrv.drain()
+    solo_s = time.perf_counter() - t0
+
+    bsrv.reset_metrics()                      # B: 2 concurrent
+    t0 = time.perf_counter()
+    bcids = [bsrv.submit_bootstrap(ct, plan=plan) for ct in bcts]
+    bres = bsrv.drain()
+    pair_s = time.perf_counter() - t0
+    bcb = bsrv.stats()["cobatch"]
+    bouts = [bres[c] for c in bcids]
+    err_out = max(float(np.max(np.abs(
+        H.decrypt_message(o, bsk, bp) - z)))
+        for o, z in zip(bouts, bmsgs))
+    assert err_out <= plan.error_bound(), \
+        f"bootstrap error {err_out:.3e} breached the documented " \
+        f"bound {plan.error_bound():.3e}"
+    assert all(o.logq == plan.out_logq for o in bouts)
+
     # ---- trickle: arrival rate < batch; only the age policy flushes.
     # adaptive_target is disabled here on purpose: with it on, a trickle
     # is released the moment the target shrinks to the arrival rate and
@@ -517,6 +583,29 @@ def run(params, *, batch: int, mul_requests: int, rot_requests: int,
             "overhead_frac": round(obs_on_s / obs_off_s - 1.0, 4),
             "trace_events": trace_events,
             "bitwise_identical": obs_bitwise,
+        },
+        "boot": {
+            "params": {"logN": bp.logN, "logQ": bp.logQ,
+                       "logp": bp.logp},
+            "concurrent": 2,
+            "pipeline_ops": len(plan.ops),
+            "logq_in": plan.logq_in,
+            "out_logq": plan.out_logq,
+            "levels_gained": plan.levels_gained,
+            "compile_s": round(boot_compile_s, 3),
+            "solo_latency_s": round(solo_s, 4),
+            "concurrent_drain_s": round(pair_s, 4),
+            "latency_s_per_bootstrap": round(pair_s / 2, 4),
+            "cobatch_speedup": round(2 * solo_s / pair_s, 3)
+            if pair_s > 0 else 0.0,
+            "cross_circuit_batches": bcb["cross_circuit_batches"],
+            "cross_circuit_rate": bcb["cross_circuit_rate"],
+            "max_err": err_out,
+            "error_bound": plan.error_bound(),
+            "precision_bits_in": round(-math.log2(err_in), 2)
+            if err_in > 0 else float(bp.logp),
+            "precision_bits_out": round(-math.log2(err_out), 2)
+            if err_out > 0 else float(bp.logp),
         },
         "multihost": {
             "muls": mh_muls,

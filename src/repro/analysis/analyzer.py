@@ -110,10 +110,20 @@ def analyze_circuit(ops: Sequence[OpNode],
     try:
         meta = propagate(ops, input_meta, params)
     except CircuitError as e:
-        return AnalysisReport(
-            diagnostics=[Diagnostic("HS001", "error", str(e),
-                                    node=e.node)],
-            n_ops=len(ops))
+        diags = [Diagnostic("HS001", "error", str(e), node=e.node)]
+        if "needs bootstrapping" in str(e) and e.node is not None:
+            # the exhausted ciphertext is the offending node's operand:
+            # a bootstrap spliced in front of it would refresh the
+            # level and let the rest of the circuit proceed
+            args = [a for a in ops[e.node].args if isinstance(a, int)]
+            at = args[0] if args else e.node
+            diags.append(Diagnostic(
+                "HS007", "info",
+                f"the level-exhausted ciphertext (node {at}'s output) "
+                f"is bootstrappable: insert the repro.boot pipeline "
+                f"there — run(bootstrap=\"auto\") does this "
+                f"automatically (docs/BOOTSTRAP.md)", node=at))
+        return AnalysisReport(diagnostics=diags, n_ops=len(ops))
     noise = estimate_noise(ops, input_meta, params,
                            input_bounds=input_bounds,
                            pt_bounds=pt_bounds,

@@ -32,7 +32,7 @@ __all__ = ["OPS", "PLAIN_OPS", "LEVEL_OPS", "CircuitError", "Meta",
 # op -> number of ciphertext operands
 OPS: Dict[str, int] = {
     "mul": 2, "add": 2, "sub": 2, "rotate": 1, "conjugate": 1,
-    "slot_sum": 1, "rescale": 1, "mod_down": 1,
+    "slot_sum": 1, "rescale": 1, "mod_down": 1, "mod_raise": 1,
     "mul_plain": 1, "add_plain": 1}
 
 # ops whose second operand is an ENCODED PLAINTEXT riding the request
@@ -40,7 +40,7 @@ OPS: Dict[str, int] = {
 PLAIN_OPS: Tuple[str, ...] = ("mul_plain", "add_plain")
 
 # ops that exist purely for the paper's §III-A modulus-chain discipline
-LEVEL_OPS: Tuple[str, ...] = ("rescale", "mod_down")
+LEVEL_OPS: Tuple[str, ...] = ("rescale", "mod_down", "mod_raise")
 
 NodeRef = Union[int, str]
 Meta = Tuple[int, int]                               # (logq, logp)
@@ -138,6 +138,11 @@ def transfer(op: str, metas: Sequence[Meta], params: HEParams, *,
         if not 0 < logq2 <= logq:
             raise err(f"mod_down target logq2={logq2} "
                       f"outside (0, {logq}]")
+        logq = logq2
+    elif op == "mod_raise":
+        if not logq < logq2 <= params.logQ:
+            raise err(f"mod_raise target logq2={logq2} outside "
+                      f"({logq}, {params.logQ}]")
         logq = logq2
     return (logq, logp)
 

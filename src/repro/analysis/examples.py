@@ -92,10 +92,28 @@ def _rotation_average():
         "rotation neighborhood sum (composite r=5, pow2 keys only)"
 
 
+def _bootstrap():
+    """The full `repro.boot` pipeline at the reference small-param
+    bootstrap config, as the analyzer sees it: a mod_raise head, two
+    BSGS DFT stages, and the complex-exponential EvalMod between them —
+    the deepest circuit in the registry, linted like any other."""
+    from repro.boot.pipeline import boot_params, bootstrap_circuit
+
+    params = boot_params()
+    plan = bootstrap_circuit(params, logq_in=params.logp)
+    return dict(ops=plan.ops, params=params,
+                input_meta={plan.in_name: (plan.logq_in, plan.logp)},
+                input_nslots={plan.in_name: plan.n_slots},
+                input_bounds=plan.msg_bound,
+                pt_bounds=plan.pt_bounds), \
+        "CKKS bootstrap pipeline (mod_raise + CtS + EvalMod + StC)"
+
+
 EXAMPLES: Dict[str, Callable[[], Tuple[dict, str]]] = {
     "degree4": _degree4,
     "affine_sigmoid": _affine_sigmoid,
     "rotation_average": _rotation_average,
+    "bootstrap": _bootstrap,
 }
 
 

@@ -182,6 +182,13 @@ def estimate_noise(ops: Sequence[OpNode],
             d = node.dlogp or params.logp
             nu = x.nu / 2.0 ** d + rescale_noise(params)
             msg = x.msg / 2.0 ** d
+        elif node.op == "mod_raise":
+            # the centered lift is exact in the decoded view: the q·I(X)
+            # term it introduces is removed by the bootstrap's EvalMod
+            # stage, whose approximation error is the pipeline's
+            # documented error contract (docs/BOOTSTRAP.md), not a
+            # per-op noise term — so message and noise carry through
+            nu, msg = x.nu, x.msg
         else:                                        # mod_down
             # power-of-two modulus masking is exact: no rounding term
             nu, msg = x.nu, x.msg

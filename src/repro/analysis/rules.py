@@ -30,6 +30,10 @@ The catalog (docs/ANALYSIS.md has the long-form version):
          levels — a smaller logQ would shrink every limb array the
          device touches (the paper's §II point that q sizing is THE
          throughput lever).
+  HS007  bootstrappable-exhaustion info   companion to an exhaustion
+         HS001: names the node whose level-exhausted output a
+         `repro.boot` bootstrap would refresh (run(bootstrap="auto")
+         inserts it there automatically).
 
 The HS1xx series is shardlint (`repro.analysis.xla`): findings about
 the COMPILED serving engines' HLO, not about circuits — emitted by the
@@ -205,6 +209,10 @@ RULES: Dict[str, Rule] = {r.id: r for r in (
          _check_rotations),
     Rule("HS005", "info", "eager-rescale", _check_eager_rescale),
     Rule("HS006", "info", "depth-headroom", _check_depth_headroom),
+    # companion to a modulus-exhaustion HS001: names the node whose
+    # output is the level-exhausted — and bootstrappable — ciphertext
+    # (emitted by the analyzer itself, alongside the HS001)
+    Rule("HS007", "info", "bootstrappable-exhaustion", None),
     # HS1xx: shardlint (repro.analysis.xla) emits these directly over
     # compiled-HLO cells; registered here so IDs/severities/titles stay
     # one catalog with stable references for CI greps and docs

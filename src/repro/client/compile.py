@@ -87,6 +87,9 @@ class CompiledCircuit:
     plain_registers: Set[Tuple[str, int]] = \
         dataclasses.field(default_factory=set)
     pt_bounds: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # node index of each auto-inserted bootstrap's mod_raise head
+    # (compile_handle(bootstrap="auto")); empty when none fired
+    bootstraps: List[int] = dataclasses.field(default_factory=list)
 
 
 def _ref_key(ref: NodeRef):
@@ -98,9 +101,11 @@ def _ref_key(ref: NodeRef):
 
 class _Lowering:
     def __init__(self, params: HEParams,
-                 plain_lookup: Optional[Callable[[str, int], bool]]):
+                 plain_lookup: Optional[Callable[[str, int], bool]],
+                 bootstrap: bool = False):
         self.params = params
         self.lookup = plain_lookup
+        self.bootstrap = bootstrap
         self.ops: List[CircuitOp] = []
         self.meta: List[Tuple[int, int]] = []      # per-op (logq, logp)
         self.inputs: Dict[str, Ciphertext] = {}
@@ -110,6 +115,8 @@ class _Lowering:
         self.requires: Set[Requirement] = set()
         self.plain_registers: Set[Tuple[str, int]] = set()
         self.pt_bounds: Dict[int, float] = {}
+        self.bootstraps: List[int] = []
+        self._boot_memo: Dict[NodeRef, NodeRef] = {}
 
     def m(self, ref: NodeRef) -> Tuple[int, int]:
         return self.in_meta[ref] if isinstance(ref, str) else self.meta[ref]
@@ -165,6 +172,43 @@ class _Lowering:
             b = self.rescale(b, pb - pa)
         return self.align_levels(a, b)
 
+    # ---- bootstrap insertion --------------------------------------------
+
+    def maybe_bootstrap(self, ref: NodeRef, n_slots: int) -> NodeRef:
+        """Auto-insertion (compile_handle(bootstrap="auto")): when a mul
+        operand has no level left for the post-mul rescale — exactly
+        where the dataflow pass would raise "needs bootstrapping" — the
+        full `repro.boot` pipeline is spliced in front of it, and the
+        mul proceeds at the refreshed level. Per-ref memo: an exhausted
+        value feeding several muls (x*x, or a shared subexpression)
+        bootstraps ONCE."""
+        if not self.bootstrap:
+            return ref
+        if self.m(ref)[0] - self.params.logp >= self.params.logp:
+            return ref
+        if ref in self._boot_memo:
+            return self._boot_memo[ref]
+        from repro.boot.pipeline import bootstrap_circuit
+        lq, lp = self.m(ref)
+        plan = bootstrap_circuit(
+            self.params, logq_in=lq, logp=lp, n_slots=n_slots,
+            plain_lookup=lambda hs, q: (hs, q) in self.plain_registers
+            or (self.lookup is not None and self.lookup(hs, q)))
+        off = len(self.ops)
+        for node, m in zip(plan.ops, plan.meta):
+            args = tuple(ref if isinstance(a, str) else a + off
+                         for a in node.args)
+            self.ops.append(dataclasses.replace(node, args=args))
+            self.meta.append(m)
+        for i, bnd in plan.pt_bounds.items():
+            self.pt_bounds[i + off] = bnd
+        self.requires |= plan.requires
+        self.plain_registers |= plan.plain_registers
+        self.bootstraps.append(off)
+        out = len(self.ops) - 1
+        self._boot_memo[ref] = out
+        return out
+
     # ---- plaintext operands ---------------------------------------------
 
     def plain_operand(self, h: CipherHandle, log_delta: int, logq: int):
@@ -199,13 +243,16 @@ class _Lowering:
             return name
         refs = [self.visit(a) for a in h.args]
         if h.op == "mul":
-            a, b = self.align_levels(*refs)
+            a = self.maybe_bootstrap(refs[0], h.n_slots)
+            b = self.maybe_bootstrap(refs[1], h.n_slots)
+            a, b = self.align_levels(a, b)
             a, b = sorted((a, b), key=_ref_key)
             i = self.emit("mul", (a, b), out=self.out("mul", (a, b)))
             i = self.rescale(i, p.logp)
             self.requires.add(("evk",))
         elif h.op == "mul_plain":
             a, = refs
+            a = self.maybe_bootstrap(a, h.n_slots)
             lq = self.m(a)[0]
             pt, hsh, bound = self.plain_operand(h, p.log_delta, lq)
             i = self.emit("mul_plain", (a,), pt=pt, pt_logp=p.log_delta,
@@ -249,20 +296,32 @@ class _Lowering:
 
 def compile_handle(root: CipherHandle, params: HEParams, *,
                    plain_lookup: Optional[Callable[[str, int], bool]]
-                   = None) -> CompiledCircuit:
+                   = None,
+                   bootstrap: Union[bool, str] = False) -> CompiledCircuit:
     """Lower one traced expression to a served circuit.
 
     plain_lookup(hash, logq) → bool: whether the server's plaintext
     cache already holds an operand (``TableCache.has_plain``); matching
     operands ship hash-only, skipping the client-side encode.
+
+    bootstrap: "auto" (or True) splices the `repro.boot` pipeline in
+    front of any mul operand too exhausted for its post-mul rescale —
+    the trace may then exceed the native depth budget; the indices of
+    inserted pipelines land in ``CompiledCircuit.bootstraps``. The
+    default False keeps today's behavior: a too-deep trace raises
+    "needs bootstrapping" at compile.
     """
+    if bootstrap not in (False, True, "auto", "off"):
+        raise ValueError(f"bootstrap must be 'auto' or 'off', "
+                         f"got {bootstrap!r}")
     if root.op == "input":
         # a bare input needs no server round trip at all
         return CompiledCircuit(ops=[], inputs={"in0": root.ct},
                                out_logq=root.ct.logq,
                                out_logp=root.ct.logp,
                                n_slots=root.n_slots, requires=set())
-    lw = _Lowering(params, plain_lookup)
+    lw = _Lowering(params, plain_lookup,
+                   bootstrap=bootstrap in (True, "auto"))
     out = lw.visit(root)
     if isinstance(out, str) or out != len(lw.ops) - 1:
         # defensive: the server returns the LAST node's ciphertext, so a
@@ -277,4 +336,5 @@ def compile_handle(root: CipherHandle, params: HEParams, *,
                            out_logq=out_logq, out_logp=out_logp,
                            n_slots=root.n_slots, requires=lw.requires,
                            plain_registers=lw.plain_registers,
-                           pt_bounds=lw.pt_bounds)
+                           pt_bounds=lw.pt_bounds,
+                           bootstraps=lw.bootstraps)

@@ -120,8 +120,14 @@ class HESession:
             if reg is not None else None
         self._c_circuits = reg.counter("client.circuits") \
             if reg is not None else None
+        self._c_bootstraps = reg.counter("client.bootstraps") \
+            if reg is not None else None
         self.auto_keys = auto_keys
         self._futures: Dict[int, CipherFuture] = {}
+        # bootstrap plans keyed by (logq, logp, n_slots, config):
+        # construction (stage lowering + DFT matrices) happens once per
+        # input shape; repeats also ship their diagonals hash-only
+        self._boot_plans: Dict[tuple, object] = {}
         # raw server-submit results completed by a future-triggered
         # drain, buffered until the next explicit drain() claims them
         self._raw: Dict[int, Ciphertext] = {}
@@ -174,14 +180,53 @@ class HESession:
 
     # ---- execution -------------------------------------------------------
 
-    def compile(self, handle: CipherHandle) -> CompiledCircuit:
+    def compile(self, handle: CipherHandle,
+                bootstrap: Union[bool, str] = False) -> CompiledCircuit:
         """Lower one traced expression (auto level alignment, CSE,
-        plaintext-cache-aware operand encoding) without submitting it."""
+        plaintext-cache-aware operand encoding) without submitting it.
+        bootstrap: as in :meth:`run`."""
         return compile_handle(handle, self.params,
-                              plain_lookup=self.server.cache.has_plain)
+                              plain_lookup=self.server.cache.has_plain,
+                              bootstrap=bootstrap)
+
+    def bootstrap(self, x: Union[Ciphertext, CipherHandle, CipherFuture],
+                  *, config=None) -> CipherFuture:
+        """Refresh a level-exhausted ciphertext through the served
+        `repro.boot` pipeline; returns a future whose result is the
+        SAME message at a higher level (within the plan's documented
+        error bound — bootstrap is approximate, see docs/BOOTSTRAP.md).
+
+        x: a ciphertext, input handle, traced handle (run first), or
+        future (drained first). Plans are cached per input shape, so
+        repeat bootstraps skip plan construction AND ship their
+        CoeffToSlot/SlotToCoeff diagonals hash-only. Needed rotation /
+        conjugation keys auto-provision like :meth:`run`'s.
+        """
+        from repro.boot.pipeline import BootConfig, bootstrap_circuit
+        if isinstance(x, CipherHandle):
+            x = x.ct if x.op == "input" else self.run([x])[0]
+        if isinstance(x, CipherFuture):
+            x = x.result()
+        key = (x.logq, x.logp, x.n_slots, config or BootConfig())
+        plan = self._boot_plans.get(key)
+        if plan is None:
+            plan = bootstrap_circuit(
+                self.params, logq_in=x.logq, logp=x.logp,
+                n_slots=x.n_slots, config=config,
+                plain_lookup=self.server.cache.has_plain)
+            self._boot_plans[key] = plan
+        if self.auto_keys and self.sk is not None:
+            self.ensure_keys(plan.requires)
+        cid = self.server.submit_bootstrap(x, plan=plan)
+        fut = CipherFuture(self, cid)
+        self._futures[cid] = fut
+        if self._c_bootstraps is not None:
+            self._c_bootstraps.inc()
+        return fut
 
     def run(self, handles: Sequence[CipherHandle], *,
-            check: str = "off") -> List[CipherFuture]:
+            check: str = "off",
+            bootstrap: Union[bool, str] = False) -> List[CipherFuture]:
         """Compile + submit traced expressions; returns one future per
         handle. Nothing executes until a future's result() drains the
         server — so everything submitted here (and any raw server
@@ -207,6 +252,12 @@ class HESession:
         skips analysis entirely. The reports of the latest checked run
         are kept on ``self.last_reports`` (one per handle, None for
         bare inputs) either way.
+
+        bootstrap: "auto" (or True) lets the compile pass splice the
+        served `repro.boot` pipeline in front of level-exhausted mul
+        operands, so a trace deeper than the native modulus budget
+        still runs (approximately — see docs/BOOTSTRAP.md). Default
+        off: such traces raise "needs bootstrapping" at compile.
         """
         if check not in ("off", "warn", "error"):
             raise ValueError(f"check must be 'off', 'warn', or "
@@ -227,7 +278,8 @@ class HESession:
             cc = compile_handle(
                 h, self.params,
                 plain_lookup=lambda hs, lq: cache.has_plain(hs, lq)
-                or (hs, lq) in pending)
+                or (hs, lq) in pending,
+                bootstrap=bootstrap)
             pending |= cc.plain_registers
             compiled.append((h, cc))
         if check != "off":
@@ -248,7 +300,8 @@ class HESession:
                 # the compile-time has_plain answer raced LRU eviction
                 # (a sibling's registration in this very call can evict
                 # the entry): re-lower with every operand materialized
-                cc = compile_handle(h, self.params, plain_lookup=None)
+                cc = compile_handle(h, self.params, plain_lookup=None,
+                                    bootstrap=bootstrap)
                 cid = self.server.submit_circuit(cc.ops, cc.inputs)
             to_register.append(CipherFuture(self, cid))
             futures.append(to_register[-1])

@@ -35,8 +35,8 @@ from repro.core.rns import DEFAULT, PipelineConfig
 __all__ = [
     "encrypt_coeffs", "encrypt_message", "decrypt_coeffs", "decrypt_message",
     "he_add", "he_sub", "he_neg", "he_mul", "rescale", "rescale_poly",
-    "he_mod_down", "mod_down_poly", "he_mul_plain", "he_add_plain",
-    "encode_plain",
+    "he_mod_down", "mod_down_poly", "he_mod_raise", "mod_raise_poly",
+    "he_mul_plain", "he_add_plain", "encode_plain",
 ]
 
 
@@ -251,6 +251,60 @@ def he_mod_down(ct: Ciphertext, params: HEParams, logq2: int) -> Ciphertext:
     return Ciphertext(
         ax=mod_down_poly(ct.ax, params, logq2),
         bx=mod_down_poly(ct.bx, params, logq2),
+        logq=logq2, logp=ct.logp, n_slots=ct.n_slots)
+
+
+def mod_raise_poly(poly: jnp.ndarray, params: HEParams, logq: int,
+                   logq2: int) -> jnp.ndarray:
+    """Lift a mod-q limb polynomial into the larger modulus 2^logq2.
+
+    The coefficient is centered (sign-extended above bit logq−1 from its
+    mod-q lift) and re-masked at logq2 — the bootstrap mod-raise: the
+    decrypted value becomes t + q·I(X) for small I, which EvalMod later
+    removes. Like :func:`rescale_poly`, all indexing is on the trailing
+    limb axis so leading batch axes pass through unchanged and the
+    batched `repro.hserve.engine` step shares this implementation.
+    """
+    assert 0 < logq < logq2 <= params.logQ
+    beta = params.beta_bits
+    L2 = params.qlimbs(logq2)
+    pad = L2 - poly.shape[-1]
+    if pad > 0:
+        poly = jnp.concatenate(
+            [poly, jnp.zeros(poly.shape[:-1] + (pad,), poly.dtype)],
+            axis=-1)
+    else:
+        poly = poly[..., :L2]
+    sign = (poly[..., (logq - 1) // beta] >> ((logq - 1) % beta)) & 1
+    high_fill = jnp.where(sign[..., None].astype(bool),
+                          jnp.asarray(~jnp.zeros((), poly.dtype)),
+                          jnp.zeros((), poly.dtype))
+    idx = jnp.arange(L2)
+    w, r = divmod(logq, beta)
+    limb_sel = idx >= (w + (1 if r else 0))
+    lifted = jnp.where(limb_sel, high_fill, poly)
+    if r:
+        part = poly[..., w] | jnp.where(
+            sign.astype(bool),
+            jnp.asarray(((1 << beta) - (1 << r)) & ((1 << beta) - 1),
+                        poly.dtype),
+            jnp.zeros((), poly.dtype))
+        lifted = lifted.at[..., w].set(part)
+    return bigint.mask_bits(lifted, logq2)
+
+
+def he_mod_raise(ct: Ciphertext, params: HEParams, logq2: int
+                 ) -> Ciphertext:
+    """Raise to a larger modulus q' = 2^logq2 > q (bootstrap step 1).
+
+    The scale is untouched; the underlying plaintext gains a q·I(X)
+    error term (|I| small for a fresh-ish ciphertext) that the EvalMod
+    stage of the bootstrap pipeline removes homomorphically.
+    """
+    assert ct.logq < logq2 <= params.logQ
+    return Ciphertext(
+        ax=mod_raise_poly(ct.ax, params, ct.logq, logq2),
+        bx=mod_raise_poly(ct.bx, params, ct.logq, logq2),
         logq=logq2, logp=ct.logp, n_slots=ct.n_slots)
 
 

@@ -147,7 +147,7 @@ def circuit_schedule(ops: List[CircuitOp],
             keys.append((node.op, in_logq, nslots[-1]))
         elif node.op == "rescale":
             keys.append((node.op, in_logq, node.dlogp or params.logp))
-        elif node.op == "mod_down":
+        elif node.op in ("mod_down", "mod_raise"):
             keys.append((node.op, in_logq, node.logq2))
         else:
             keys.append((node.op, in_logq, None))
@@ -201,6 +201,8 @@ def execute_circuit_reference(ops: List[CircuitOp],
             out = H.rescale(cts[0], params, dlogp=node.dlogp or None)
         elif node.op == "mod_down":
             out = H.he_mod_down(cts[0], params, node.logq2)
+        elif node.op == "mod_raise":
+            out = H.he_mod_raise(cts[0], params, node.logq2)
         elif node.op == "mul_plain":
             if node.pt is None:
                 raise ValueError(

@@ -60,7 +60,7 @@ import jax.numpy as jnp
 
 from repro.core import bigint
 from repro.core.cipher import Ciphertext
-from repro.core.heaan import mod_down_poly, rescale_poly
+from repro.core.heaan import mod_down_poly, mod_raise_poly, rescale_poly
 from repro.core.params import HEParams
 from repro.core.rotate import automorphism_poly, conjugation_k, rotation_k
 from repro.dist.he_pipeline import (
@@ -74,7 +74,8 @@ from repro.obs.stages import StageTimer
 
 __all__ = ["STAGE_OPS", "slot_sum_rotations", "make_he_rotate_step",
            "make_slot_sum_step", "make_rescale_step", "make_mod_down_step",
-           "make_addsub_step", "make_mul_plain_step", "make_add_plain_step",
+           "make_mod_raise_step", "make_addsub_step", "make_mul_plain_step",
+           "make_add_plain_step",
            "Inflight", "OpEngine"]
 
 
@@ -194,6 +195,23 @@ def make_mod_down_step(st: HEStatic, mesh, logq2: int, **knobs):
     def step(ax, bx):
         return (sf.out(mod_down_poly(ax, params, logq2)),
                 sf.out(mod_down_poly(bx, params, logq2)))
+
+    return step
+
+
+def make_mod_raise_step(st: HEStatic, mesh, logq2: int, **knobs):
+    """Build step(ax, bx) -> (ax', bx') raising to modulus 2^logq2 —
+    the bootstrap's first stage (`core.heaan.mod_raise_poly` batched):
+    zero-pad the limb axis to qlimbs(logq2), center at the OLD logq
+    boundary (sign extension), re-mask at logq2. Pure limb arithmetic,
+    no NTT and no key switch, so like rescale/mod_down it predicts zero
+    key-switch collectives (shardlint pins this on HLO)."""
+    sf = make_stage_fns(st, mesh, **knobs)
+    params, logq = st.params, st.logq
+
+    def step(ax, bx):
+        return (sf.out(mod_raise_poly(ax, params, logq, logq2)),
+                sf.out(mod_raise_poly(bx, params, logq, logq2)))
 
     return step
 
@@ -391,6 +409,13 @@ class OpEngine:
 
             def runner(a):
                 return step(a["ax1"], a["bx1"])
+        elif op == "mod_raise":
+            step = self._jit(
+                make_mod_raise_step(st, self.mesh, extra, **self._knobs),
+                op)
+
+            def runner(a):
+                return step(a["ax1"], a["bx1"])
         elif op in ("add", "sub"):
             step = self._jit(
                 make_addsub_step(st, self.mesh, op, **self._knobs), op)
@@ -526,6 +551,7 @@ class OpEngine:
           rotate/conjugate/slot_sum   unchanged
           rescale      logq − dlogp,  logp − dlogp
           mod_down     logq2,         logp
+          mod_raise    logq2,         logp
         """
         op = batch.op
         out = []
@@ -539,7 +565,7 @@ class OpEngine:
             elif op == "rescale":
                 logq -= req.dlogp
                 logp -= req.dlogp
-            elif op == "mod_down":
+            elif op in ("mod_down", "mod_raise"):
                 logq = req.logq2
             out.append(Ciphertext(ax=ax[i], bx=bx[i], logq=logq,
                                   logp=logp, n_slots=c0.n_slots))

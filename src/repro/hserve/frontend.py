@@ -272,6 +272,12 @@ class HEFrontend(HEServer):
         self.injector = injector
         self.transport_kind = transport
         self.heartbeat_timeout = heartbeat_timeout
+        # spawn-time worker config, kept so revive_workers() can replay
+        # a full init frame into a respawned subprocess worker
+        self.worker_devices = worker_devices
+        self.heartbeat_interval = heartbeat_interval
+        self.use_kernels = use_kernels
+        self.engine_knobs = dict(engine_knobs)
         self._seq = 0
         # results completed out-of-poll (quiesce before a key
         # broadcast, eager retires) buffer here until the next poll
@@ -295,20 +301,7 @@ class HEFrontend(HEServer):
                 tp = InProcTransport(eng)
             else:
                 tp = SubprocessTransport(devices=worker_devices)
-                import dataclasses
-                init = {"type": "init",
-                        "params": dataclasses.asdict(params),
-                        "mesh": [1, worker_devices],
-                        "wid": wid,
-                        "has_evk": evk is not None,
-                        "rot_rs": sorted(rot),
-                        "has_conj": conj_key is not None,
-                        "heartbeat": {"path": hb_path,
-                                      "interval": heartbeat_interval}
-                        if hb_path else None,
-                        "knobs": {"use_kernels": use_kernels,
-                                  **engine_knobs}}
-                tp.send(init, _key_frames(evk, rot, conj_key))
+                self._send_worker_init(tp, wid, hb_path)
             self.workers.append(WorkerHandle(wid, tp,
                                              heartbeat_path=hb_path))
         if transport == "subprocess":
@@ -328,6 +321,30 @@ class HEFrontend(HEServer):
             self.registry.add_source(f"worker{w.wid}", w.stats)
 
     # ---- worker lifecycle ------------------------------------------------
+
+    def _send_worker_init(self, tp, wid: int,
+                          hb_path: Optional[str]) -> None:
+        """Ship the init frame (params/mesh/knobs + ALL current key
+        material) to a fresh subprocess worker. Reads keys from the
+        catalog, not the constructor args, so a respawned worker also
+        receives keys that were added (auto-provisioned rotations,
+        bootstrap key sets) after the fleet first came up. The caller
+        awaits the "ok" ack."""
+        import dataclasses
+        cat = self.cache
+        init = {"type": "init",
+                "params": dataclasses.asdict(self.params),
+                "mesh": [1, self.worker_devices],
+                "wid": wid,
+                "has_evk": cat._ek is not None,
+                "rot_rs": sorted(cat._rot),
+                "has_conj": cat._conj is not None,
+                "heartbeat": {"path": hb_path,
+                              "interval": self.heartbeat_interval}
+                if hb_path else None,
+                "knobs": {"use_kernels": self.use_kernels,
+                          **self.engine_knobs}}
+        tp.send(init, _key_frames(cat._ek, cat._rot, cat._conj))
 
     def _alive_workers(self) -> List[WorkerHandle]:
         return [w for w in self.workers if w.alive]
@@ -372,15 +389,39 @@ class HEFrontend(HEServer):
                 self._on_death(w, "heartbeat_timeout")
 
     def revive_workers(self) -> None:
-        """Bring killed IN-PROCESS workers back online (test harness:
-        module-scoped sessions reuse one frontend across fault
-        examples). Their engines kept their compiled steps; anything
-        they were serving was already requeued at death."""
+        """Bring every killed worker back online and restore the fleet
+        to full strength.
+
+        In-process workers are un-killed in place — their engines kept
+        their compiled steps. Subprocess workers are RESPAWNED: a new
+        interpreter comes up, the init frame is replayed with the
+        catalog's CURRENT key material (including keys broadcast after
+        the original spawn), and the "ok" ack is awaited before the
+        worker is routable. The fresh process has no compiled steps or
+        table slices, so its warm-bucket routing state resets; anything
+        it was serving when it died was already requeued at death, and
+        re-served batches are bitwise identical (deterministic integer
+        ops)."""
+        respawned: List[WorkerHandle] = []
         for w in self.workers:
-            if not w.alive and w.transport.kind == "inproc":
-                w.transport.revive()
-                w.alive = True
-                w.pending = None
+            if w.alive:
+                continue
+            if w.transport.kind == "inproc":
+                w.transport.revive()     # engine kept its compiled steps
+            else:
+                w.transport.respawn()
+                self._send_worker_init(w.transport, w.wid,
+                                       w.heartbeat_path)
+                w.keys_warm = set()      # blank interpreter: nothing warm
+                respawned.append(w)
+            w.alive = True
+            w.pending = None
+        for w in respawned:
+            head, _ = w.transport.recv()
+            if head.get("type") != "ok":
+                w.alive = False
+                raise WorkerDied(
+                    f"worker {w.wid} failed respawn init: {head}")
         self._g_alive.set(len(self._alive_workers()))
 
     # ---- key broadcast ---------------------------------------------------

@@ -98,7 +98,7 @@ class Request:
             return (self.op, self.logq, self.cts[0].n_slots)
         if self.op == "rescale":
             return (self.op, self.logq, self.dlogp)
-        if self.op == "mod_down":
+        if self.op in ("mod_down", "mod_raise"):
             return (self.op, self.logq, self.logq2)
         return (self.op, self.logq, None)     # mul / add / sub / conjugate
 
@@ -206,6 +206,10 @@ class RequestQueue:
             raise ValueError(
                 f"mod_down target logq2={logq2} outside (0, "
                 f"{cts[0].logq}]")
+        if op == "mod_raise" and logq2 <= cts[0].logq:
+            raise ValueError(
+                f"mod_raise target logq2={logq2} must exceed the "
+                f"ciphertext's logq {cts[0].logq}")
         if op in PLAIN_OPS:
             if pt is None:
                 raise ValueError(f"{op} needs an encoded plaintext operand "

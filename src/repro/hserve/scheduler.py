@@ -226,15 +226,18 @@ class CircuitScheduler:
     @staticmethod
     def levels_for_key(key: BucketKey) -> Set[int]:
         """Levels (logq) a request with this bucket key touches: its
-        input level, plus — for the level-dropping ops, whose target is
+        input level, plus — for the level-CHANGING ops, whose target is
         encoded in the key's extra — the level it produces. The single
         home of the op → output-level mapping (used both for successor
-        keys and for the in-flight batch's own key)."""
+        keys and for the in-flight batch's own key). mod_raise walks
+        UP the chain (a bootstrap circuit's raised-level tail): without
+        it, prefetch only ever warms descending levels and every
+        post-mod-raise node cold-misses the TableCache."""
         op, logq, extra = key
         out = {logq}
         if op == "rescale":
             out.add(logq - extra)
-        elif op == "mod_down":
+        elif op in ("mod_down", "mod_raise"):
             out.add(extra)
         return out
 

@@ -186,25 +186,45 @@ class SubprocessTransport:
 
     def __init__(self, *, devices: int = 1, env: Mapping[str, str] | None = None,
                  ) -> None:
+        # spawn args are kept so :meth:`respawn` can relaunch an
+        # identical process after a crash
+        self._devices = devices
+        self._env = dict(env) if env else None
+        self.proc = self._spawn()
+
+    def _spawn(self) -> subprocess.Popen:
         import repro
         # repro may be a namespace package (__file__ is None) — resolve
         # the src dir from its search path instead
         src_dir = os.path.dirname(
             os.path.abspath(list(repro.__path__)[0]))
         penv = dict(os.environ)
-        penv.update(env or {})
+        penv.update(self._env or {})
         pp = penv.get("PYTHONPATH", "")
         penv["PYTHONPATH"] = src_dir + (os.pathsep + pp if pp else "")
         penv["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={devices}")
+            f"--xla_force_host_platform_device_count={self._devices}")
         penv.setdefault("JAX_PLATFORMS", "cpu")
         # -c instead of -m: the package __init__ imports the worker
         # module, so `-m` would re-execute it as __main__ (runpy warns)
-        self.proc = subprocess.Popen(
+        return subprocess.Popen(
             [sys.executable, "-c",
              "from repro.hserve.worker import main; main()"],
             stdin=subprocess.PIPE, stdout=subprocess.PIPE,
             env=penv)
+
+    def respawn(self) -> None:
+        """Relaunch the worker process with the original spawn args.
+
+        The new process is a BLANK interpreter: it has no params, keys,
+        tables, or compiled steps — the owner must replay the init
+        frame (and await its ack) before routing work to it.
+        `HEFrontend.revive_workers` does exactly that.
+        """
+        if self.alive:
+            self.proc.kill()
+        self.proc.wait(timeout=30)
+        self.proc = self._spawn()
 
     @property
     def alive(self) -> bool:

@@ -36,10 +36,14 @@ def serving_op_levels(op: str, levels, params) -> list:
 
     rescale and mod_down consume a level: at the bottom of the modulus
     chain (logq < 2·logp) there is no level left to drop, and the
-    serving dataflow would never schedule them there.
+    serving dataflow would never schedule them there. mod_raise is the
+    mirror image: at the top of the chain (logq + logp > logQ) there is
+    no headroom left to raise into.
     """
     if op in ("rescale", "mod_down"):
         return [lq for lq in levels if lq >= 2 * params.logp]
+    if op == "mod_raise":
+        return [lq for lq in levels if lq + params.logp <= params.logQ]
     return list(levels)
 
 
@@ -67,12 +71,15 @@ def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
     from repro.dist.sharding import he_limb_sharding
     from repro.hserve.engine import (
         make_add_plain_step, make_addsub_step, make_he_rotate_step,
-        make_mod_down_step, make_mul_plain_step, make_rescale_step,
-        make_slot_sum_step, slot_sum_rotations,
+        make_mod_down_step, make_mod_raise_step, make_mul_plain_step,
+        make_rescale_step, make_slot_sum_step, slot_sum_rotations,
     )
     if params is None:
         from repro.configs.heaan_mul import CONFIG as params
-    logq = params.logQ if logq is None else logq
+    if logq is None:
+        # mod_raise is unservable at the very top of the chain (nothing
+        # to raise into) — its default cell sits one level down
+        logq = params.logQ - (params.logp if op == "mod_raise" else 0)
     st = hp.he_static(params, logq)
     t1, t2, ek = hp.he_table_specs(st)
     ct_sh = he_limb_sharding(mesh, batch=batch) if ct_sharding is None \
@@ -98,6 +105,10 @@ def lower_he_serving_cell(op: str, batch: int, mesh, *, logq=None,
     if op == "mod_down":
         step = make_mod_down_step(st, mesh, max(params.logp,
                                                 logq - params.logp))
+        return jax.jit(step).lower(ct, ct)
+    if op == "mod_raise":
+        step = make_mod_raise_step(st, mesh,
+                                   min(params.logQ, logq + params.logp))
         return jax.jit(step).lower(ct, ct)
     if op in ("add", "sub"):
         step = make_addsub_step(st, mesh, op)

@@ -53,7 +53,8 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
              schedule: bool = False, traced: int = 0,
              check: str = "off", seed: int = 0,
              trace: str | None = None, profile_stages: bool = False,
-             metrics: str | None = None, workers: int = 0) -> dict:
+             metrics: str | None = None, workers: int = 0,
+             bootstrap: int = 0) -> dict:
     """Batched multi-level HE serving, driven through a `repro.client`
     HESession (the session owns keygen, encrypt/decrypt, and the
     HEServer; the raw per-op stream rides `session.server`).
@@ -84,6 +85,15 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     an :class:`repro.hserve.HEFrontend` routing batches to that many
     in-process worker engines (docs/SERVING.md "Multi-host serving").
     Bitwise identical to the single-server path.
+
+    `bootstrap` > 0 additionally serves that many CONCURRENT bootstrap
+    pipelines (`repro.boot`, docs/BOOTSTRAP.md) over level-exhausted
+    ciphertexts — the whole run switches to the reference bootstrap
+    params (`boot_params()`: logQ=336, h=2) so the pipeline fits the
+    modulus chain. Bootstrap results verify against the plan's
+    documented error bound (approximate, not bitwise); the returned
+    stats gain a "bootstrap" block with the measured error, the bound,
+    and the cross-circuit co-batch rate the concurrent pipelines hit.
     """
     from repro.client import HESession
     from repro.configs.heaan_mul import SMOKE
@@ -93,7 +103,11 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     from repro.launch.mesh import make_host_mesh
     from repro.obs import Tracer
 
-    params = SMOKE
+    if bootstrap:
+        from repro.boot import boot_params
+        params = boot_params()
+    else:
+        params = SMOKE
     requests = requests or 2 * batch + 1   # force >1 batch and padding
     # the lowest level logq = logp is excluded: mul results there cannot
     # rescale (ciphertext exhausted), and verification rescales every mul
@@ -214,6 +228,18 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
                  np.full(n, np.conj(np.roll(zt * zt * wz + zt,
                                             -1)).sum())))
 
+    bfuts = []
+    if bootstrap:
+        # N concurrent bootstrap pipelines over level-exhausted inputs:
+        # their aligned stage nodes co-batch ACROSS circuits (and with
+        # the plain request stream) through the same queue
+        for j in range(bootstrap):
+            zb = rng.uniform(-1, 1, n) + 1j * rng.uniform(-1, 1, n)
+            zb *= 2.0 ** -5 / np.max(np.abs(zb))
+            ct = session.encrypt(zb, seed=8888 + j).ciphertext
+            ct = H.he_mod_down(ct, params, params.logp)  # exhausted
+            bfuts.append((session.bootstrap(ct), zb))
+
     # session.drain (not server.drain) so traced futures resolve while
     # the raw per-op/circuit results come back as {rid: ct}
     results.update(session.drain())
@@ -230,6 +256,35 @@ def serve_he(batch: int, requests: int = 0, levels: int = 1,
     stats = server.stats()
     stats["devices"] = len(jax.devices())
     stats["max_err"] = max(errs)
+    if bootstrap:
+        # approximate-op contract: error-BOUND gate, not bitwise
+        plan = next(iter(session._boot_plans.values()))
+        berrs = []
+        for fut, want in bfuts:
+            out = fut.result()
+            assert out.logq == plan.out_logq, (out.logq, plan.out_logq)
+            berrs.append(
+                float(np.abs(session.decrypt(out) - want).max()))
+        bound = plan.error_bound()
+        if max(berrs) > bound:
+            raise AssertionError(
+                f"bootstrap error {max(berrs):.3e} exceeds the "
+                f"documented bound {bound:.3e}")
+        if schedule and bootstrap >= 2 \
+                and stats["cobatch"]["cross_circuit_batches"] == 0:
+            raise AssertionError(
+                "concurrent bootstraps never co-batched across "
+                "circuits — the scheduler lost the batched-"
+                "bootstrapping payoff")
+        stats["bootstrap"] = {
+            "n": bootstrap,
+            "max_err": max(berrs),
+            "error_bound": bound,
+            "logq_in": plan.logq_in,
+            "out_logq": plan.out_logq,
+            "cross_circuit_rate":
+                stats["cobatch"]["cross_circuit_rate"],
+        }
     if trace:
         stats["trace_events"] = tracer.write(trace)
     if metrics:
@@ -319,6 +374,15 @@ def main():
                          "affinity to this many in-process worker "
                          "engines, with heartbeat health and worker-"
                          "death requeue (0 = single HEServer)")
+    ap.add_argument("--bootstrap", type=int, nargs="?", const=2,
+                    default=0, metavar="N",
+                    help="also serve N concurrent CKKS bootstrap "
+                         "pipelines (repro.boot) over level-exhausted "
+                         "ciphertexts; bare --bootstrap means N=2 so "
+                         "cross-circuit co-batching is exercised. "
+                         "Switches the run to the reference bootstrap "
+                         "params (logQ=336, h=2); results verify "
+                         "against the documented error bound")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="dump the unified MetricsRegistry snapshot "
                          "(serve/cache/scheduler/engine/client planes) "
@@ -337,7 +401,8 @@ def main():
                          traced=args.traced, check=args.check,
                          trace=args.trace,
                          profile_stages=args.profile_stages,
-                         metrics=args.metrics, workers=args.workers)
+                         metrics=args.metrics, workers=args.workers,
+                         bootstrap=args.bootstrap)
         ops = ", ".join(
             f"{op}: {d['requests']} reqs @ {d['ops_per_s']}/s "
             f"(p50 {d['latency_ms']['p50']}ms, "
@@ -374,6 +439,13 @@ def main():
                     for s, v in row.items()) if tot else "—"
                 cov = f" coverage {tot / wall:.0%} of wall" if wall else ""
                 print(f"  fig3[{op}]: {split}{cov}")
+        if args.bootstrap:
+            bs = stats["bootstrap"]
+            print(f"  bootstrap: {bs['n']} concurrent pipeline(s) "
+                  f"logq {bs['logq_in']} -> {bs['out_logq']}, "
+                  f"max_err {bs['max_err']:.2e} "
+                  f"(bound {bs['error_bound']:.2e}), "
+                  f"cross_circuit_rate {bs['cross_circuit_rate']}")
         if args.trace:
             print(f"  trace: {stats['trace_events']} events -> "
                   f"{args.trace}")

@@ -123,6 +123,27 @@ def test_hs001_dataflow_violation_is_an_error_diagnostic():
     assert "exhausts the modulus" in r.errors[0].message
 
 
+def test_hs007_names_the_bootstrappable_node_on_exhaustion():
+    # the HS001 companion: the analyzer points at the node whose
+    # level-exhausted OUTPUT a repro.boot pipeline would refresh — the
+    # failing rescale's mul operand, where run(bootstrap="auto") would
+    # splice the insertion
+    ops = [CircuitOp("mul", ("x", "x")),
+           CircuitOp("rescale", (0,), dlogp=PARAMS.logp)]
+    for _ in range(PARAMS.L):
+        ops += [CircuitOp("mul", (len(ops) - 1, len(ops) - 1)),
+                CircuitOp("rescale", (len(ops),), dlogp=PARAMS.logp)]
+    r = _report(ops)
+    assert not r.ok
+    hs7 = [d for d in r.diagnostics if d.rule == "HS007"]
+    assert len(hs7) == 1 and hs7[0].severity == "info"
+    # propagation dies at the FIRST exhausting rescale (the L-th pair,
+    # at logq = logp); the suggested insertion point is its mul operand
+    assert hs7[0].node == 2 * PARAMS.L - 2
+    assert "bootstrappable" in hs7[0].message
+    assert 'bootstrap="auto"' in hs7[0].message
+
+
 def test_hs002_waterline():
     ops = [CircuitOp("add", ("x", "x"))]
     clean = _report(ops)
@@ -174,12 +195,13 @@ def test_hs006_depth_headroom():
 
 
 def test_rules_registry_is_complete():
-    # HS001-HS006 lint circuits; HS101-HS105 are shardlint's compiled-HLO
+    # HS001-HS007 lint circuits; HS101-HS105 are shardlint's compiled-HLO
     # rules (emitted by repro.analysis.xla, registered here so the
     # catalog stays one table — see tests/test_shardlint.py)
-    assert sorted(RULES) == [f"HS00{i}" for i in range(1, 7)] \
+    assert sorted(RULES) == [f"HS00{i}" for i in range(1, 8)] \
         + [f"HS10{i}" for i in range(1, 6)]
     assert RULES["HS001"].severity == "error"
+    assert RULES["HS007"].severity == "info"
 
 
 # -------------------------------------------------------------------- cost

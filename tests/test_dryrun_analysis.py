@@ -200,7 +200,8 @@ def test_serving_steps_lower_with_abstract_tables(op):
 def test_serving_op_table_matches_dataflow_and_levels_filter():
     """The lowering table is generated FROM the analysis dataflow op set
     (a newly served op cannot dodge coverage), and level filtering only
-    trims the level-consuming ops at the chain bottom."""
+    trims the level-consuming ops at the chain bottom and the
+    level-raising mod_raise at the chain top."""
     from repro.analysis.dataflow import OPS, PLAIN_OPS
     from repro.core.params import test_params
     from repro.launch.cells import HE_SERVING_OPS, serving_op_levels
@@ -213,6 +214,9 @@ def test_serving_op_table_matches_dataflow_and_levels_filter():
         got = serving_op_levels(op, levels, params)
         if op in ("rescale", "mod_down"):
             assert got == [lq for lq in levels if lq >= 2 * params.logp], op
+        elif op == "mod_raise":
+            assert got == [lq for lq in levels
+                           if lq + params.logp <= params.logQ], op
         else:
             assert got == list(levels), op
     with pytest.raises(ValueError, match="unknown serving op"):

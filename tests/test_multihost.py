@@ -250,6 +250,56 @@ def test_subprocess_workers_serve_bitwise(keys, pool, reference):
         fe.close()
 
 
+def test_subprocess_worker_respawn_restores_full_strength(keys, pool):
+    """Worker restart/rejoin (the ROADMAP open item): a REAL subprocess
+    worker is SIGKILLed mid-drain (after its first dispatch — the batch
+    was computed but never delivered), the stream must complete on the
+    survivor via requeue, and `revive_workers()` must respawn the dead
+    process, replay the key/table init frame, and return the fleet to
+    full strength — with the re-served stream bitwise identical and the
+    respawned worker (blank interpreter, cold engine) really serving."""
+    sk, _, evk = keys
+    top, lo = pool
+    rk = {1: rot_keygen(PARAMS, sk, 1)}
+
+    ref_srv = HEServer(PARAMS, evk, rot_keys=rk, mesh=_mesh(), batch=2)
+    ref_rids = _submit_stream(ref_srv, top, lo, n_each=2)
+    ref_rot = ref_srv.submit_rotate(top[0], 1)
+    ref_res = ref_srv.drain()
+
+    fe = HEFrontend(PARAMS, evk, rot_keys=rk, transport="subprocess",
+                    workers=2, batch=2,
+                    injector=FailureInjector(kill_worker_at={0: 1}))
+    try:
+        dead_proc = fe.workers[0].transport.proc
+        rids = _submit_stream(fe, top, lo, n_each=2)
+        res = fe.drain()                     # worker 0 dies mid-drain
+        assert dead_proc.poll() is not None, "process still alive"
+        fr = fe.stats()["frontend"]
+        assert fr["deaths"] == 1 and fr["alive"] == 1
+        assert fr["requeued_requests"] > 0
+        assert all(_bitwise(res[r], ref_res[rr])
+                   for r, rr in zip(rids, ref_rids))
+
+        fe.revive_workers()
+        assert fe.stats()["frontend"]["alive"] == 2
+        w0 = fe.workers[0]
+        assert w0.transport.proc is not dead_proc     # a NEW process
+        assert w0.transport.alive
+        assert w0.keys_warm == set()         # blank interpreter again
+
+        rids = _submit_stream(fe, top, lo, n_each=2)
+        rot_rid = fe.submit_rotate(top[0], 1)   # init replay shipped rk
+        res = fe.drain()
+        assert all(_bitwise(res[r], ref_res[rr])
+                   for r, rr in zip(rids, ref_rids))
+        assert _bitwise(res[rot_rid], ref_res[ref_rot])
+        # full strength means the respawned worker actually served
+        assert w0.keys_warm, "respawned worker never took a batch"
+    finally:
+        fe.close()
+
+
 # --------------------------------------------------------------------------
 # 8-device mesh: worker-death requeue on a sharded (2, 4) fleet
 # --------------------------------------------------------------------------

@@ -168,7 +168,10 @@ def test_committed_manifest_validates_and_selfdiffs_clean():
     assert obj["meshes"] == {"1x1": [1, 1], "2x4": [2, 4]}
     from repro.launch.cells import HE_SERVING_OPS
     for op in HE_SERVING_OPS:
-        assert cell_key(op, obj["levels"][0], "2x4") in obj["cells"], op
+        # mod_raise has no headroom at the top of the chain — its grid
+        # starts one level down (serving_op_levels); check the bottom
+        lq = obj["levels"][-1] if op == "mod_raise" else obj["levels"][0]
+        assert cell_key(op, lq, "2x4") in obj["cells"], op
 
 
 def test_validate_manifest_catches_schema_violations():

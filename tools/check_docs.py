@@ -77,6 +77,7 @@ BENCH_SCHEMA = {
     "client": dict,
     "analysis": dict,
     "obs": dict,
+    "boot": dict,
     "multihost": dict,
 }
 PARAMS_KEYS = ("logN", "logQ", "logp", "beta_bits")
@@ -113,6 +114,19 @@ OBS_SCHEMA = {"muls": int, "off_drain_s": NUM, "on_drain_s": NUM,
               "overhead_frac": NUM, "trace_events": int,
               "bitwise_identical": bool}
 OBS_MAX_OVERHEAD = 0.02
+# the repro.boot batched-bootstrapping A/B. Two GATES: max_err must
+# stay within the documented error_bound (bootstrap is approximate —
+# the bound IS its correctness contract), and cross_circuit_batches
+# must be > 0 (concurrent bootstraps that never co-batch mean the
+# scheduler lost the batched-bootstrapping payoff entirely)
+BOOT_SCHEMA = {"params": dict, "concurrent": int, "pipeline_ops": int,
+               "logq_in": int, "out_logq": int, "levels_gained": int,
+               "compile_s": NUM, "solo_latency_s": NUM,
+               "concurrent_drain_s": NUM, "latency_s_per_bootstrap": NUM,
+               "cobatch_speedup": NUM, "cross_circuit_batches": int,
+               "cross_circuit_rate": NUM, "max_err": NUM,
+               "error_bound": NUM, "precision_bits_in": NUM,
+               "precision_bits_out": NUM}
 # the multi-host frontend/worker scaling A/B (virtual-time makespan
 # over W in-process workers) + the worker-death requeue check.
 # scaling_efficiency_at_4 is GATED ≥ MULTIHOST_MIN_EFF4: the load-first
@@ -234,6 +248,29 @@ def check_bench(bench: Path) -> list:
                 f"{bench.name}.obs: tracing overhead {frac:.1%} exceeds "
                 f"the {OBS_MAX_OVERHEAD:.0%} gate — the lifecycle "
                 "tracer must stay cheap enough to leave on")
+    if isinstance(obj.get("boot"), dict):
+        bo = obj["boot"]
+        errors += _check_block(bo, BOOT_SCHEMA, f"{bench.name}.boot")
+        err, bound = bo.get("max_err"), bo.get("error_bound")
+        if isinstance(err, NUM) and isinstance(bound, NUM) \
+                and not isinstance(err, bool) and err > bound:
+            errors.append(
+                f"{bench.name}.boot: measured bootstrap error {err:.3e} "
+                f"breaches the documented bound {bound:.3e} — the error "
+                "contract is the approximate pipeline's correctness "
+                "gate")
+        cxb = bo.get("cross_circuit_batches")
+        if isinstance(cxb, int) and not isinstance(cxb, bool) and cxb == 0:
+            errors.append(
+                f"{bench.name}.boot: zero cross-request co-batching — "
+                "concurrent bootstraps must share batches through the "
+                "circuit scheduler (the batched-bootstrapping payoff)")
+        lg = bo.get("levels_gained")
+        if isinstance(lg, int) and not isinstance(lg, bool) and lg < 1:
+            errors.append(
+                f"{bench.name}.boot: bootstrap gained {lg} levels — the "
+                "refreshed ciphertext must land strictly above its "
+                "input level")
     if isinstance(obj.get("multihost"), dict):
         mh = obj["multihost"]
         errors += _check_block(mh, MULTIHOST_SCHEMA,
